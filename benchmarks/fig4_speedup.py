@@ -1,0 +1,36 @@
+"""Paper Fig. 4: estimated (Lemma 3.1) vs actual multi-device speedup for
+four networks. 'Actual' here is the pipeline simulator driven by REAL
+single-device step times measured on the reduced architectures — the same
+role the paper's measured multi-GPU runs play, minus the GPUs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import amdahl
+from repro.core.pipeline import StepTimes, multi_device_speedup
+from repro.models.blocks import RunConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import train
+
+ARCHS = ("granite-3-2b", "gemma2-27b", "mamba2-780m", "musicgen-large")
+
+
+def run(csv_rows):
+    print("\n== Fig. 4: estimated (Lemma 3.1) vs simulated actual speedup ==")
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        res = train(cfg, RunConfig(attn_impl="dense", remat="none"),
+                    OptConfig(lr=1e-3), batch=8, seq=64, steps=6, log_every=0)
+        med = lambda f: float(np.median([getattr(t, f) for t in res.step_times[2:]]))
+        t = StepTimes(data_load=med("data_load"), data_prep=med("data_prep"),
+                      h2d=med("h2d"), compute=med("compute"),
+                      param_update=0.05 * med("compute"))
+        r_o = t.r_o()
+        print(f"{arch}: T_C={t.compute*1e3:.0f}ms R_O={r_o:.3f}")
+        print(f"  {'G':>3s} {'estimated':>10s} {'actual(sim)':>12s}")
+        for g in (1, 2, 4, 8):
+            est = amdahl.speedup(g, r_o)
+            act = multi_device_speedup(t, g)
+            print(f"  {g:3d} {est:10.2f} {act:12.2f}")
+            csv_rows.append((f"fig4/{arch}/G{g}", act, f"est={est:.2f}"))

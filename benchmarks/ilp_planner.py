@@ -1,0 +1,66 @@
+"""§3.1.3: the X_mini/algorithm ILP solved per assigned arch — per-layer-type
+algorithm choices under the HBM bound, and the planner's end-to-end pick."""
+from __future__ import annotations
+
+from repro.configs.base import ARCH_IDS, get_config, get_shape
+from repro.core import ilp, memory_model as mm
+from repro.core.hardware import SINGLE_POD
+from repro.core.planner import plan
+
+
+def _layer_choices(cfg, shape, mb: int):
+    """Choices per layer-type: attention {dense, chunked} x remat {no, yes}.
+    Times are napkin (relative); memory from the transformer model terms."""
+    S = shape.seq_len
+    B = mb
+    H = max(cfg.num_heads, 1)
+    tp = SINGLE_POD.tp
+    heads_shard = tp if (H % tp == 0) else 1
+    choices = []
+    dense_mem = 2 * B * (H / heads_shard) * S * S * 4 / tp
+    flash_mem = 2 * B * (H / heads_shard) * S * 1024 * 4 / tp
+    act_save = B * S * cfg.d_model * 2 / tp
+    # (name, time-units, memory): dense is ~10% faster (no rescaling pass),
+    # remat=no saves the backward recompute (~25% of step) but keeps 4x acts
+    for attn_t, attn_m, aname in ((1.0, dense_mem, "dense"),
+                                  (1.1, flash_mem, "flash")):
+        for remat_t, remat_m, rname in ((1.25, act_save, "remat"),
+                                        (1.0, 4 * act_save, "save")):
+            choices.append(ilp.Choice(f"{aname}+{rname}", attn_t * remat_t,
+                                      attn_m + remat_m))
+    return choices
+
+
+def run(csv_rows):
+    shape = get_shape("train_4k")
+    hbm = SINGLE_POD.chip.hbm_bytes
+    print("\n== Eq. 6 ILP: per-layer algorithm choice under M_bound ==")
+    print(f"{'arch':24s} {'mb':>3s} {'choice':16s} {'mem(GB)':>8s} {'feasible':>8s}")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if not cfg.has_attention:
+            print(f"{arch:24s}   - (attention-free: algorithm axis degenerate,"
+                  " ILP selects remat only)")
+        # M_bound = HBM minus params/opt/grads (the paper's Eq. 5 analogue)
+        static = mm.train_memory(cfg, shape, dp=SINGLE_POD.dp, tp=SINGLE_POD.tp,
+                                 fsdp=True, microbatch=1, attn_impl="chunked",
+                                 remat="block", seq_parallel=True)
+        bound = hbm - (static.params + static.grads + static.opt_state)
+        mb = 1
+        layers = [_layer_choices(cfg, shape, mb)] * len(cfg.pattern)
+        sol = ilp.solve_ilp(layers, bound / max(len(cfg.pattern), 1) *
+                            len(cfg.pattern))
+        names = {layers[k][sol.choices[k]].name for k in range(len(layers))}
+        print(f"{arch:24s} {mb:3d} {'/'.join(sorted(names)):16s} "
+              f"{sol.memory/2**30:8.2f} {str(sol.feasible):>8s}")
+        csv_rows.append((f"ilp/{arch}/choice", float(sol.feasible),
+                         "/".join(sorted(names))))
+
+    print("\n== end-to-end planner picks (train_4k, single pod) ==")
+    for arch in ARCH_IDS:
+        p = plan(get_config(arch), shape)
+        print(f"{arch:24s} mb={p.microbatch} attn={p.attn_impl} "
+              f"remat={p.remat} fsdp={p.fsdp} opt={p.opt_kind} "
+              f"fits={p.fits}")
+        csv_rows.append((f"planner/{arch}/fits", float(p.fits),
+                         f"mb={p.microbatch},{p.attn_impl},{p.remat}"))

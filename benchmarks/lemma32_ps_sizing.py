@@ -1,0 +1,58 @@
+"""Paper Lemma 3.2: parameter-server sizing across the assigned archs and
+bandwidths, plus the TPU mapping (grad-sync schedule masked behind compute)
+validated against the dry-run collective bytes when available."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, get_config, get_shape
+from repro.core import memory_model as mm, ps
+from repro.core.hardware import SINGLE_POD
+from repro.core.planner import estimate_step_time
+
+
+def run(csv_rows):
+    print("\n== Lemma 3.2: N_ps for the assigned archs (paper-era PS view) ==")
+    print(f"{'arch':24s} {'S_p(GB)':>8s} {'1Gbit':>6s} {'10Gbit':>7s} {'100Gbit':>8s}")
+    shape = get_shape("train_4k")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        s_p = 4.0 * mm.n_params(cfg)  # fp32 params, the PS payload
+        t_c = estimate_step_time(cfg, shape, SINGLE_POD, "block", 1)["compute"]
+        row = [
+            ps.n_parameter_servers(s_p, n_w=16, b_ps=bw, t_c=max(t_c, 1e-3))
+            for bw in (1e9 / 8, 10e9 / 8, 100e9 / 8)
+        ]
+        print(f"{arch:24s} {s_p/2**30:8.1f} {row[0]:6d} {row[1]:7d} {row[2]:8d}")
+        csv_rows.append((f"lemma32/{arch}/nps_10gbit", row[1],
+                         f"s_p={s_p/2**30:.1f}GB t_c={t_c:.3f}s"))
+
+    print("\n== TPU mapping: grad-sync masked behind compute? ==")
+    print(f"{'arch':24s} {'sched':26s} {'comm(s)':>8s} {'T_C(s)':>7s} {'masked':>7s}")
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        t_c = estimate_step_time(cfg, shape, SINGLE_POD, "block", 1)["compute"]
+        plan = ps.tpu_grad_sync_plan(2.0 * mm.n_params(cfg) / SINGLE_POD.tp,
+                                     SINGLE_POD.dp, SINGLE_POD.chip.link_bw, t_c)
+        print(f"{arch:24s} {plan.schedule:26s} {plan.comm_time:8.3f} "
+              f"{t_c:7.3f} {str(plan.masked):>7s}")
+        csv_rows.append((f"lemma32_tpu/{arch}/masked", float(plan.masked),
+                         plan.schedule))
+
+    # cross-check against dry-run wire bytes (if the sweep has run)
+    d = Path("results/dryrun")
+    if d.exists():
+        print("\n== validation vs dry-run collective bytes (train_4k single) ==")
+        for arch in ARCH_IDS:
+            f = d / f"{arch}__train_4k__single.json"
+            if not f.exists():
+                continue
+            rec = json.loads(f.read_text())
+            if not rec.get("ok") or "derived" not in rec:
+                continue
+            wire = rec["derived"]["wire_bytes"]
+            t_wire = wire / SINGLE_POD.chip.link_bw
+            print(f"{arch:24s} dry-run wire/chip "
+                  f"{wire/2**30:6.2f} GiB -> {t_wire:6.3f}s on ICI")
+            csv_rows.append((f"lemma32_dryrun/{arch}/wire_gib", wire / 2**30, ""))

@@ -1,0 +1,101 @@
+"""§Roofline: per (arch × shape) on the single-pod mesh, derive the three
+roofline terms from the dry-run artifacts:
+
+  compute    = HLO_FLOPs / peak_FLOP/s      (per-chip FLOPs from counting lowers)
+  memory     = HLO_bytes / HBM_bw
+  collective = wire_bytes / link_bw          (per-chip, HLO-parsed; see hlo.py)
+
+plus MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (prefill/decode) and
+the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs × chips). Writes
+results/roofline.md (the EXPERIMENTS.md §Roofline table is generated here).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.core import memory_model as mm
+from repro.core.hardware import TPU_V5E
+
+HBM_BUDGET = TPU_V5E.hbm_bytes
+
+
+def model_flops(cfg, shape) -> float:
+    n_act = mm.n_active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: one token per example
+
+
+def suggestion(dominant: str, cfg, shape) -> str:
+    if dominant == "collective":
+        if shape.kind == "train":
+            return ("reduce FSDP all-gather volume (larger microbatch / "
+                    "param prefetch overlap) or move grad sync to "
+                    "reduce-scatter")
+        return "shard params less aggressively (no FSDP at decode) / cache layout"
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return "quantize KV cache / ring-buffer SWA slots to cut cache reads"
+        return "increase arithmetic intensity: bigger microbatch, fuse norms"
+    return "compute-bound — raise MFU via MXU-aligned tiles; already healthy"
+
+
+def load_record(arch: str, shape: str, mesh: str = "single"):
+    p = Path("results/dryrun") / f"{arch}__{shape}__{mesh}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else rec
+
+
+def run(csv_rows, write_md: bool = True):
+    print("\n== Roofline (single-pod 256 chips, per-chip terms in seconds) ==")
+    hdr = (f"{'arch':24s} {'shape':12s} {'var':7s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'dominant':>9s} {'useful':>7s} {'mem/chip':>9s} {'fit':>4s}")
+    print(hdr)
+    lines = ["# Roofline — single-pod (16×16, 256 chips), baseline dry-runs",
+             "",
+             "| arch | shape | variant | compute s | memory s | collective s |"
+             " dominant | MODEL/HLO | bytes/chip GiB | fits 16G | next lever |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        cfg0 = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            rec = load_record(arch, shape_name)
+            if rec is None:
+                continue
+            if not rec.get("ok"):
+                lines.append(f"| {arch} | {shape_name} | - | FAILED: "
+                             f"{rec.get('error','?')[:60]} | | | | | | | |")
+                continue
+            d = rec["derived"]
+            t_comp = d["flops"] / TPU_V5E.peak_flops
+            t_mem = d["bytes_accessed"] / TPU_V5E.hbm_bw
+            t_coll = d["wire_bytes"] / TPU_V5E.link_bw
+            terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+            dom = max(terms, key=terms.get)
+            mf = model_flops(cfg0, shape)
+            useful = mf / max(d["flops"] * rec["num_devices"], 1.0)
+            memo = rec.get("full", {}).get("memory", {})
+            per_chip = (memo.get("argument_bytes", 0) + memo.get("temp_bytes", 0)
+                        + memo.get("output_bytes", 0))
+            fits = per_chip <= HBM_BUDGET
+            var = rec.get("variant", "native")[:7]
+            print(f"{arch:24s} {shape_name:12s} {var:7s} {t_comp:9.3f} "
+                  f"{t_mem:9.3f} {t_coll:9.3f} {dom:>9s} {useful:7.2f} "
+                  f"{per_chip/2**30:9.2f} {'Y' if fits else 'N':>4s}")
+            lines.append(
+                f"| {arch} | {shape_name} | {rec.get('variant','native')} | "
+                f"{t_comp:.3f} | {t_mem:.3f} | {t_coll:.3f} | **{dom}** | "
+                f"{useful:.2f} | {per_chip/2**30:.2f} | "
+                f"{'yes' if fits else 'NO'} | {suggestion(dom, cfg0, shape)} |")
+            csv_rows.append((f"roofline/{arch}/{shape_name}/{dom}",
+                             terms[dom], f"useful={useful:.2f}"))
+    if write_md:
+        Path("results").mkdir(exist_ok=True)
+        Path("results/roofline.md").write_text("\n".join(lines) + "\n")
+        print("wrote results/roofline.md")

@@ -1,0 +1,38 @@
+"""Paper Table 2: FFT vs GEMM convolution memory (AlexNet conv1-5), plus the
+transformer analogue (dense vs flash attention memory) for the assigned
+shapes — the same speed<->memory trade the ILP optimizes."""
+from __future__ import annotations
+
+from repro.configs.base import SHAPES, get_config
+from repro.core import memory_model as mm
+
+
+def run(csv_rows):
+    print("\n== Table 2: conv algorithm memory, FFT/GEMM (AlexNet) ==")
+    print(f"{'layer':6s} {'paper':>6s} {'ours':>6s} {'rel.err':>8s}")
+    errs = []
+    for i, (row, paper) in enumerate(mm.TABLE2_ROWS):
+        gemm, fft = mm.conv_alg_memory(*row)
+        ours = fft / gemm
+        err = abs(ours - paper) / paper
+        errs.append(err)
+        print(f"conv{i+1:<2d} {paper:6.1f} {ours:6.2f} {err:8.1%}")
+        csv_rows.append((f"table2/conv{i+1}_ratio", ours, f"paper={paper}"))
+    print(f"mean abs rel err: {sum(errs)/len(errs):.1%}")
+    csv_rows.append(("table2/mean_rel_err", sum(errs) / len(errs), ""))
+
+    print("\n== transformer analogue: dense vs flash attention memory ==")
+    print(f"{'arch':14s} {'shape':12s} {'dense_GB':>9s} {'flash_GB':>9s} {'ratio':>7s}")
+    for arch in ("granite-3-2b", "gemma2-27b", "qwen2-72b"):
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "prefill_32k"):
+            sh = SHAPES[shape_name]
+            B = max(sh.global_batch // 16, 1)  # per data-parallel replica
+            H = cfg.num_heads
+            S = sh.seq_len
+            dense = 2 * B * H * S * S * 4  # scores+probs f32
+            flash = 2 * B * H * S * (1024 + 2) * 4  # one kv block + stats
+            print(f"{arch:14s} {shape_name:12s} {dense/2**30:9.1f} "
+                  f"{flash/2**30:9.3f} {dense/flash:7.1f}")
+            csv_rows.append((f"attn_mem/{arch}/{shape_name}", dense / flash,
+                             "dense/flash"))

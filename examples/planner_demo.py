@@ -1,0 +1,33 @@
+"""The paper's configuration guidelines, automated: for every assigned
+architecture × input shape, print the planner's recommendation (microbatch =
+X_mini, attention algorithm = the GEMM/FFT analogue, remat, FSDP, optimizer,
+Lemma-3.2 sync schedule, fit verdict).
+
+    PYTHONPATH=src python examples/planner_demo.py [--mesh single|multi]
+"""
+import argparse
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config, get_shape
+from repro.core.hardware import MULTI_POD, SINGLE_POD
+from repro.core.planner import plan
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+args = ap.parse_args()
+mesh = SINGLE_POD if args.mesh == "single" else MULTI_POD
+
+hdr = (f"{'arch':24s} {'shape':12s} {'mb':>3s} {'attn':8s} {'remat':6s} "
+       f"{'fsdp':5s} {'opt':9s} {'mem(GB)':>8s} {'fit':3s} {'t_est(s)':>9s}")
+print(f"mesh: dp={mesh.dp} tp={mesh.tp} ({mesh.chips} chips)")
+print(hdr)
+print("-" * len(hdr))
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    for shape_name in SHAPES:
+        p = plan(cfg, get_shape(shape_name), mesh)
+        print(f"{arch:24s} {shape_name:12s} {p.microbatch:3d} {p.attn_impl:8s} "
+              f"{p.remat:6s} {str(p.fsdp):5s} {p.opt_kind:9s} "
+              f"{p.est_memory_gb:8.2f} {'Y' if p.fits else 'N':3s} "
+              f"{p.est_step_time:9.3f}")
+        for note in p.notes:
+            print(f"{'':24s} - {note}")

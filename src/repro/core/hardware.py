@@ -1,0 +1,61 @@
+"""Hardware constants.
+
+TPU v5e-class chip (the reproduction target, per the brief) and the paper's
+2017 evaluation hardware (AWS P2 / NVIDIA K80) used by the faithful
+benchmark reproductions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Chip:
+    name: str
+    peak_flops: float  # FLOP/s at the training dtype
+    hbm_bytes: float
+    hbm_bw: float  # bytes/s
+    link_bw: float  # bytes/s per ICI/interconnect link
+    vmem_bytes: float = 0.0
+
+
+TPU_V5E = Chip(
+    name="tpu-v5e",
+    peak_flops=197e12,  # bf16
+    hbm_bytes=16 * 2**30,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    vmem_bytes=128 * 2**20,
+)
+
+# Paper-era: NVIDIA GK210 (one half of a K80), AWS P2 instances (Table 1)
+K80_GK210 = Chip(
+    name="k80-gk210",
+    peak_flops=2.91e12,  # fp32 with boost off ~2.9 TFLOP/s
+    hbm_bytes=12 * 2**30,
+    hbm_bw=240e9,
+    link_bw=10e9 / 8,  # 10 Gbit Ethernet (p2.8xlarge "network" as PS link)
+)
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Mesh geometry + per-axis bandwidth used by the planner."""
+
+    chips: int
+    dp: int  # data-parallel degree (pod*data)
+    tp: int  # model-parallel degree
+    chip: Chip = TPU_V5E
+    dcn_bw: float = 25e9  # inter-pod (pod axis) bytes/s per chip
+
+    @property
+    def total_flops(self) -> float:
+        return self.chips * self.chip.peak_flops
+
+    @property
+    def total_hbm(self) -> float:
+        return self.chips * self.chip.hbm_bytes
+
+
+SINGLE_POD = MeshSpec(chips=256, dp=16, tp=16)
+MULTI_POD = MeshSpec(chips=512, dp=32, tp=16)

@@ -1,0 +1,110 @@
+"""The 7-step mini-batch pipeline (paper Fig. 1) — timing model + simulator.
+
+Steps: (1) parameter refresh, (2) data loading, (3) data preparation,
+(4) host->device transfer, (5) device compute, (6) parameter update,
+(7) distributed update. Step 5 is compute T_C; the pipeline hides steps
+2-4 behind step 5 of the previous batch (double buffering) and steps 6-7
+behind the next step's early layers when the sync plan allows.
+
+Used in three places: measuring R_O from real timings (train loop emits
+per-step durations), simulating multi-device speedup for Fig. 4, and
+feeding Lemma 3.1/3.2 in the planner.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+STEP_NAMES = (
+    "param_refresh", "data_load", "data_prep", "h2d", "compute",
+    "param_update", "dist_update",
+)
+
+
+@dataclass
+class StepTimes:
+    """Per-step durations (seconds) of one mini-batch round."""
+
+    param_refresh: float = 0.0
+    data_load: float = 0.0
+    data_prep: float = 0.0
+    h2d: float = 0.0
+    compute: float = 0.0
+    param_update: float = 0.0
+    dist_update: float = 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {k: getattr(self, k) for k in STEP_NAMES}
+
+    @property
+    def t_c(self) -> float:
+        return self.compute
+
+    def overhead(self, *, pipelined: bool = True) -> float:
+        """Non-hidden overhead T_O.
+
+        Un-pipelined: every step serializes.  Pipelined: steps 2-4 prefetch
+        behind the previous compute (hidden iff their sum <= T_C); steps 1,
+        6, 7 serialize unless the distributed-update plan masks them.
+        """
+        io = self.data_load + self.data_prep + self.h2d
+        sync = self.param_refresh + self.param_update + self.dist_update
+        if not pipelined:
+            return io + sync
+        return max(io - self.compute, 0.0) + sync
+
+    def r_o(self, *, pipelined: bool = True) -> float:
+        """The paper's R_O = T_O / T_C."""
+        return self.overhead(pipelined=pipelined) / max(self.compute, 1e-12)
+
+
+def simulate_epoch(times: StepTimes, n_batches: int, *, pipelined: bool = True,
+                   jitter: float = 0.0, seed: int = 0) -> float:
+    """Wall-clock of n_batches rounds under the pipeline model. ``jitter``
+    adds lognormal noise to each step (the paper notes real overheads are
+    stochastic while the lemma treats R_O as constant)."""
+    import random
+
+    rng = random.Random(seed)
+
+    def j(x: float) -> float:
+        if jitter <= 0 or x == 0:
+            return x
+        return x * rng.lognormvariate(0.0, jitter)
+
+    total = 0.0
+    first_io = None
+    for i in range(n_batches):
+        io = j(times.data_load) + j(times.data_prep) + j(times.h2d)
+        sync = j(times.param_refresh) + j(times.param_update) + j(times.dist_update)
+        comp = j(times.compute)
+        if not pipelined:
+            total += io + comp + sync
+            continue
+        if first_io is None:
+            first_io = io
+            total += io  # pipeline warm-up: first batch's data is not hidden
+        # double buffering: batch i+1's I/O overlaps batch i's compute;
+        # sync steps serialize after compute (unless a SyncPlan masks them)
+        total += max(io, comp) + sync
+    return total
+
+
+def multi_device_speedup(times: StepTimes, g: int, *, bus_shared: bool = True,
+                         pipelined: bool = True) -> float:
+    """Fig. 4 'actual' model: with G devices the compute splits G ways, but
+    shared-bus steps (2-4) scale their demand by G, and parameter traffic
+    (1, 6, 7) grows with G. Returns speedup vs G=1."""
+    t1 = simulate_epoch(times, 64, pipelined=pipelined)
+    scaled = StepTimes(
+        param_refresh=times.param_refresh * (g if bus_shared else 1),
+        data_load=times.data_load * g if bus_shared else times.data_load,
+        data_prep=times.data_prep,  # CPU-bound, assume enough cores
+        h2d=times.h2d * g if bus_shared else times.h2d,
+        compute=times.compute,  # per-device batch kept constant (weak scaling)
+        param_update=times.param_update * (g if bus_shared else 1),
+        dist_update=times.dist_update,
+    )
+    tg = simulate_epoch(scaled, 64, pipelined=pipelined)
+    # weak scaling: G devices process G batches in tg vs 1 batch in t1
+    return g * t1 / tg if tg > 0 else float(g)

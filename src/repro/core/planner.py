@@ -1,0 +1,195 @@
+"""End-to-end configurator — the paper's methodology automated for the
+assigned architectures on the TPU mesh.
+
+Given (arch config, input shape, mesh spec) it:
+  1. builds the memory model (M_bound analogue, §3.1.3),
+  2. sweeps candidate microbatch sizes (the X_mini knob) and solves the
+     Eq.-6 ILP over per-layer algorithm choices — attention impl
+     {dense, flash/chunked} × remat {save, recompute} — under the HBM bound,
+  3. estimates step time from a napkin roofline (compute/memory/collective),
+  4. applies Lemma 3.1 to report efficiency/speedup for the mesh size and
+     Lemma 3.2 (TPU mapping) to pick the gradient-sync schedule,
+  5. emits a Plan with every runtime knob the launcher needs.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import amdahl, ilp, memory_model as mm, ps
+from repro.core.hardware import MeshSpec, SINGLE_POD
+from repro.models import model as M
+
+
+@dataclass
+class Plan:
+    arch: str
+    shape: str
+    mesh: Tuple[int, int]  # (dp, tp)
+    fsdp: bool
+    microbatch: int
+    attn_impl: str
+    remat: str
+    seq_parallel: bool
+    opt_kind: str
+    sync_schedule: str
+    est_step_time: float
+    est_memory_gb: float
+    fits: bool
+    efficiency: float
+    notes: List[str] = field(default_factory=list)
+
+    def run_config_kwargs(self) -> Dict:
+        return dict(attn_impl=self.attn_impl, remat=self.remat,
+                    microbatch=self.microbatch)
+
+
+# ---------------------------------------------------------------------------
+# Napkin step-time model
+# ---------------------------------------------------------------------------
+
+
+def train_flops_per_step(cfg: ModelConfig, shape: ShapeConfig, remat: str) -> float:
+    """6*N_active*D (+ remat recompute ~2*N*D) + attention quadratic part."""
+    tokens = shape.global_batch * shape.seq_len
+    n_act = mm.n_active_params(cfg)
+    mult = 8.0 if remat == "block" else 6.0
+    base = mult * n_act * tokens
+    # causal attention: 2 * 0.5 * S^2 * width, fwd+bwd(2x) [+remat fwd]
+    attn = 0.0
+    cycles = M.main_cycles(cfg)
+    for s in cfg.pattern:
+        if s.mixer == "mamba":
+            attn += cycles * tokens * cfg.ssm_state * cfg.d_inner * 2 * 3
+            continue
+        win = cfg.sliding_window if s.mixer == "swa" else cfg.attn_window_override
+        s_eff = min(shape.seq_len, win) if win else shape.seq_len
+        width = cfg.num_heads * cfg.head_dim if not cfg.is_mla else (
+            cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+                             + cfg.v_head_dim))
+        fwd = 2 * 0.5 * s_eff * tokens * width * 2  # qk + pv
+        attn += cycles * fwd * (4.0 if remat == "block" else 3.0) / 2
+    return base + attn
+
+
+def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
+                       remat: str, microbatch: int) -> Dict[str, float]:
+    flops = train_flops_per_step(cfg, shape, remat) / mesh.chips
+    t_compute = flops / mesh.chip.peak_flops
+    # memory term: params read per microbatch pass + activations traffic
+    n = mm.n_params(cfg)
+    n_micro = max(shape.global_batch // mesh.dp, 1) // max(microbatch, 1)
+    param_traffic = 2 * n / mesh.tp * 3 * max(n_micro, 1)
+    act_traffic = 12 * shape.global_batch * shape.seq_len * cfg.d_model * 2 / mesh.chips
+    t_mem = (param_traffic + act_traffic) / mesh.chip.hbm_bw
+    # collective: grad sync (2*S_p) + TP activation collectives per layer
+    grad_wire = 2 * 4 * n / mesh.tp * (mesh.dp - 1) / mesh.dp
+    tp_wire = (4 * cfg.num_layers * shape.global_batch * shape.seq_len
+               * cfg.d_model * 2 / mesh.chips)
+    t_coll = (grad_wire / mesh.chips * mesh.tp + tp_wire) / mesh.chip.link_bw
+    return {"compute": t_compute, "memory": t_mem, "collective": t_coll,
+            "total": max(t_compute, t_mem, t_coll)}
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+
+
+def plan_train(cfg: ModelConfig, shape: ShapeConfig,
+               mesh: MeshSpec = SINGLE_POD) -> Plan:
+    notes: List[str] = []
+    hbm = mesh.chip.hbm_bytes
+    b_rep = max(shape.global_batch // mesh.dp, 1)
+
+    n_bytes_bf16 = 2 * mm.n_params(cfg)
+    fsdp = n_bytes_bf16 / mesh.tp > 0.25 * hbm
+    if fsdp:
+        notes.append(f"FSDP on: bf16 params/TP = "
+                     f"{n_bytes_bf16 / mesh.tp / 2**30:.1f} GiB > 25% HBM")
+
+    # optimizer: AdamW unless its state cannot fit even fully sharded
+    opt_kind = "adamw"
+    if 12 * mm.n_params(cfg) / mesh.chips > 0.55 * hbm:
+        opt_kind = "momentum"
+        notes.append("AdamW state exceeds 55% HBM fully sharded -> "
+                     "paper-era momentum SGD (4 B/param)")
+
+    # X_mini sweep (paper §3.1.3): candidate microbatches, ILP per candidate
+    best: Optional[Tuple[float, int, str, str]] = None
+    for mb in [m for m in (1, 2, 4, 8, 16, 32) if m <= b_rep and b_rep % m == 0]:
+        for attn_impl in ("dense", "chunked"):
+            for remat in ("block", "none"):
+                mem = mm.train_memory(
+                    cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
+                    microbatch=mb, attn_impl=attn_impl, remat=remat,
+                    seq_parallel=True, opt_kind=opt_kind)
+                if mem.total > 0.9 * hbm:
+                    continue
+                t = estimate_step_time(cfg, shape, mesh, remat, mb)["total"]
+                # dense attention has no flash overhead; tiny bonus at short S
+                if attn_impl == "dense" and shape.seq_len <= 4096:
+                    t *= 0.98
+                if best is None or t < best[0]:
+                    best = (t, mb, attn_impl, remat)
+    if best is None:  # nothing fits: most frugal settings, flagged
+        best = (float("inf"), 1, "chunked", "block")
+        notes.append("NO feasible microbatch found — does not fit this mesh")
+    t_best, mb, attn_impl, remat = best
+
+    mem = mm.train_memory(cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
+                          microbatch=mb, attn_impl=attn_impl, remat=remat,
+                          seq_parallel=True, opt_kind=opt_kind)
+    fits = mem.total <= hbm
+
+    # Lemma 3.2 (TPU mapping): can grad sync hide behind compute?
+    sync = ps.tpu_grad_sync_plan(
+        2 * mm.n_params(cfg) / mesh.tp, mesh.dp, mesh.chip.link_bw,
+        t_c=t_best if math.isfinite(t_best) else 1.0)
+    notes.append(f"Lemma3.2: {sync.note}")
+
+    # Lemma 3.1: overhead ratio from the non-compute roofline terms
+    terms = estimate_step_time(cfg, shape, mesh, remat, mb)
+    r_o = (max(terms["collective"] + terms["memory"] - terms["compute"], 0.0)
+           / max(terms["compute"], 1e-9))
+    eff = amdahl.efficiency(mesh.chips, r_o / mesh.chips)  # R_O already aggregate
+    return Plan(
+        arch=cfg.name, shape=shape.name, mesh=(mesh.dp, mesh.tp), fsdp=fsdp,
+        microbatch=mb, attn_impl=attn_impl, remat=remat, seq_parallel=True,
+        opt_kind=opt_kind, sync_schedule=sync.schedule,
+        est_step_time=t_best, est_memory_gb=mem.total / 2**30, fits=fits,
+        efficiency=eff, notes=notes,
+    )
+
+
+def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: MeshSpec = SINGLE_POD) -> Plan:
+    notes: List[str] = []
+    hbm = mesh.chip.hbm_bytes
+    window = 0
+    if shape.seq_len > 100_000 and not cfg.subquadratic:
+        window = 8192
+        notes.append("long-context SWA-8192 variant (DESIGN.md policy)")
+    fsdp = 2 * mm.n_params(cfg) / mesh.tp > 0.5 * hbm
+    mem = mm.decode_memory(cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
+                           window_override=window)
+    fits = mem.total <= hbm
+    if not fits:
+        notes.append(f"decode memory {mem.total/2**30:.1f} GiB > HBM")
+    # decode is memory-bound: step time ~ (params + cache) / HBM bw
+    t = (mem.params + mem.kv_cache) / mesh.chip.hbm_bw
+    return Plan(
+        arch=cfg.name, shape=shape.name, mesh=(mesh.dp, mesh.tp), fsdp=fsdp,
+        microbatch=0, attn_impl="dense", remat="none", seq_parallel=False,
+        opt_kind="-", sync_schedule="-", est_step_time=t,
+        est_memory_gb=mem.total / 2**30, fits=fits,
+        efficiency=1.0, notes=notes,
+    )
+
+
+def plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec = SINGLE_POD) -> Plan:
+    if shape.kind == "train" or shape.kind == "prefill":
+        return plan_train(cfg, shape, mesh)
+    return plan_decode(cfg, shape, mesh)

@@ -1,0 +1,65 @@
+"""Lemma 3.2 — parameter-server sizing, and its TPU mapping.
+
+Paper form:  N_ps >= 2 * S_p * N_w / (B_ps * T_C)
+(total pull+push traffic 2*S_p per worker per step, spread over N_ps servers
+of bandwidth B_ps, hidden behind compute T_C).
+
+TPU mapping (DESIGN.md §2): the "PS cluster" is the data axis itself with
+ZeRO-sharded optimizer state. The same inequality decides whether gradient
+synchronization (reduce-scatter + all-gather == pull+push) hides behind
+compute, and therefore which collective schedule the planner picks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def n_parameter_servers(s_p: float, n_w: int, b_ps: float, t_c: float) -> int:
+    """Lemma 3.2 (Eq. 8), ceil'd. s_p bytes, b_ps bytes/s, t_c seconds."""
+    if t_c <= 0 or b_ps <= 0:
+        raise ValueError("t_c, b_ps > 0")
+    return max(1, math.ceil(2.0 * s_p * n_w / (b_ps * t_c)))
+
+
+def io_time(s_p: float, n_w: int, n_ps: int, b_ps: float) -> float:
+    """Communication time for one pull+push round (Eq. 7 LHS)."""
+    return 2.0 * s_p * n_w / (n_ps * b_ps)
+
+
+def masked(s_p: float, n_w: int, n_ps: int, b_ps: float, t_c: float) -> bool:
+    """True iff I/O hides behind compute (the ideal-pipeline condition)."""
+    return io_time(s_p, n_w, n_ps, b_ps) <= t_c
+
+
+@dataclass(frozen=True)
+class SyncPlan:
+    schedule: str  # "all_reduce" | "reduce_scatter_all_gather"
+    comm_time: float
+    compute_time: float
+    masked: bool
+    note: str
+
+
+def tpu_grad_sync_plan(param_bytes: float, dp: int, link_bw: float,
+                       t_c: float, *, zero_sharded: bool = True) -> SyncPlan:
+    """Lemma 3.2 on the TPU data axis.
+
+    all-reduce moves ~2*S_p*(dp-1)/dp per chip; reduce-scatter + all-gather
+    moves the same wire bytes but splits the optimizer work 1/dp per chip
+    (the ZeRO '"N_ps = dp parameter servers'" mapping) and lets the
+    all-gather overlap the next step's first layers.
+    """
+    frac = (dp - 1) / dp if dp > 1 else 0.0
+    wire = 2.0 * param_bytes * frac
+    comm = wire / link_bw
+    schedule = "reduce_scatter_all_gather" if zero_sharded else "all_reduce"
+    return SyncPlan(
+        schedule=schedule,
+        comm_time=comm,
+        compute_time=t_c,
+        masked=comm <= t_c,
+        note=(f"wire {wire/1e9:.2f} GB over dp={dp}; "
+              + ("hidden behind compute" if comm <= t_c else
+                 "NOT maskable - increase T_C (bigger microbatch) or shrink S_p")),
+    )

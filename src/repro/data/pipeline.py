@@ -1,0 +1,143 @@
+"""Data pipeline — the paper's steps (2) data loading, (3) data preparation,
+(4) host->device transfer, with double-buffered background prefetch so they
+hide behind step (5) compute, and per-step timing instrumentation that feeds
+R_O (Lemma 3.1) and the Fig.-4 benchmark.
+
+The corpus is synthetic (seeded zipfian token stream with a deterministic
+"document" structure) — there is no dataset gate in this container, but the
+loader is a real pipeline: it reads shards from disk if present, otherwise
+generates them, and always goes through the same decode/augment/pack path.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class BatchTimes:
+    data_load: float = 0.0
+    data_prep: float = 0.0
+    h2d: float = 0.0
+
+
+class SyntheticCorpus:
+    """Deterministic zipfian token shards, optionally persisted to disk
+    (so step-2 'data loading' does real file I/O when a cache dir is set)."""
+
+    def __init__(self, vocab: int, shard_tokens: int = 1 << 20,
+                 cache_dir: Optional[str] = None, seed: int = 0):
+        self.vocab = vocab
+        self.shard_tokens = shard_tokens
+        self.cache_dir = Path(cache_dir) if cache_dir else None
+        self.seed = seed
+        if self.cache_dir:
+            self.cache_dir.mkdir(parents=True, exist_ok=True)
+
+    def load_shard(self, idx: int) -> np.ndarray:
+        if self.cache_dir:
+            p = self.cache_dir / f"shard_{idx:05d}.npy"
+            if p.exists():
+                return np.load(p)
+        rng = np.random.default_rng(self.seed + idx)
+        # zipf-ish distribution clipped to vocab
+        z = rng.zipf(1.3, size=self.shard_tokens)
+        toks = (z % self.vocab).astype(np.int32)
+        # inject deterministic n-gram structure so a model can learn something
+        toks[1::7] = (toks[::7][: len(toks[1::7])] * 31 + 17) % self.vocab
+        if self.cache_dir:
+            np.save(self.cache_dir / f"shard_{idx:05d}.npy", toks)
+        return toks
+
+
+class PrefetchLoader:
+    """Steps 2-4 with a background producer thread + bounded queue
+    (double buffering). ``__next__`` returns (device_batch, BatchTimes)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
+                 corpus: Optional[SyntheticCorpus] = None, depth: int = 2,
+                 sharding=None, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.corpus = corpus or SyntheticCorpus(cfg.vocab_size, seed=seed)
+        self.sharding = sharding
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._shard_idx = 0
+        self._buf = np.zeros((0,), np.int32)
+        self._thread.start()
+
+    # -- producer (steps 2 & 3) ------------------------------------------
+    def _fill(self, n_tokens: int) -> np.ndarray:
+        while self._buf.size < n_tokens:
+            shard = self.corpus.load_shard(self._shard_idx)
+            self._shard_idx += 1
+            self._buf = np.concatenate([self._buf, shard])
+        out, self._buf = self._buf[:n_tokens], self._buf[n_tokens:]
+        return out
+
+    def _producer(self):
+        while not self._stop.is_set():
+            t0 = time.perf_counter()
+            k = self.cfg.num_codebooks or 0
+            need = self.batch * (self.seq + 1) * max(k, 1)
+            raw = self._fill(need)
+            t_load = time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            if k:
+                arr = raw.reshape(self.batch, self.seq + 1, k)
+                tokens, labels = arr[:, :-1], arr[:, 1:]
+            else:
+                arr = raw.reshape(self.batch, self.seq + 1)
+                tokens, labels = arr[:, :-1], arr[:, 1:]
+            batch: Dict[str, np.ndarray] = {
+                "tokens": np.ascontiguousarray(tokens),
+                "labels": np.ascontiguousarray(labels),
+            }
+            if self.cfg.num_image_tokens:
+                rng = np.random.default_rng(self._shard_idx)
+                batch["image_embeds"] = rng.standard_normal(
+                    (self.batch, self.cfg.num_image_tokens, self.cfg.d_model),
+                    dtype=np.float32) * 0.02
+            t_prep = time.perf_counter() - t0
+            try:
+                self.q.put((batch, t_load, t_prep), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+
+    # -- consumer (step 4) -------------------------------------------------
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        batch, t_load, t_prep = self.q.get()
+        t0 = time.perf_counter()
+        if self.sharding is not None:
+            dev = {k: jax.device_put(v, self.sharding.get(k))
+                   for k, v in batch.items()}
+        else:
+            dev = {k: jax.device_put(v) for k, v in batch.items()}
+        jax.block_until_ready(jax.tree_util.tree_leaves(dev)[0])
+        t_h2d = time.perf_counter() - t0
+        return dev, BatchTimes(t_load, t_prep, t_h2d)
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,110 @@
+"""Pallas TPU flash-decoding: one query token against a long KV cache.
+
+Grid (B, H, n_kv_blocks); kv sequential with running (m, l, acc) scratch —
+the single-chip analogue of the cross-shard partial-softmax combine the
+SPMD decode path performs. Per-example valid length arrives as a (B, 1)
+int32 array (position of the current token; cache entries > pos masked).
+
+Layout: q (B, H, D), k/v (B, KV, S, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, cap, window, tk, nk):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0, 0]
+    k_start = ki * tk
+    relevant = k_start <= pos
+    if window:
+        relevant &= (k_start + tk - 1) >= pos - window + 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (1, D) block carries one head
+        k = k_ref[0, 0].astype(jnp.float32)  # (tk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, tk)
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, tk), 1)
+        mask = kpos <= pos
+        if window:
+            mask &= (pos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, *, scale: float, window: int = 0,
+                     cap: float = 0.0, kv_block: int = 512,
+                     interpret: bool = True):
+    """q (B,H,D), k/v (B,KV,S,D), pos (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    tk = min(kv_block, max(S, 8))
+    k_pad = -S % tk
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    nk = (S + k_pad) // tk
+    q4 = q[:, :, None, :]  # (B, H, 1, D)
+    pos2 = pos.reshape(B, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, cap=cap, window=window,
+                               tk=tk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, ki, g=G: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, tk, D), lambda b, h, ki, g=G: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos2, q4, k, v)
+    return out[:, :, 0, :]

@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes eagerly with the same block/grid schedule; on TPU the
+same call sites compile natively. Model code passes (B, S, H, D) layouts;
+these wrappers adapt to the kernels' (B, H, S, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as dec_k
+from repro.kernels import flash_attention as fa_k
+from repro.kernels import ssd_scan as ssd_k
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "cap"))
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, scale, window=0,
+                    cap=0.0):
+    """(B,S,H,D) x (B,S,KV,D) -> (B,S,H,D), causal from position 0."""
+    out = fa_k.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        scale=scale, window=window, cap=cap, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "cap"))
+def decode_attention(q, k, v, pos, *, scale, window=0, cap=0.0):
+    """q (B,1,H,D), cache k/v (B,S,KV,D), pos (B,) -> (B,1,H,D)."""
+    out = dec_k.decode_attention(
+        q[:, 0], k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), pos,
+        scale=scale, window=window, cap=cap, interpret=_interpret())
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_neg, b_mat, c_mat, *, chunk=256):
+    """Model layout x (B,L,H,P), dt (B,L,H) -> y (B,L,H,P), h (B,H,N,P)."""
+    y, h = ssd_k.ssd_scan(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), a_neg, b_mat, c_mat,
+        chunk=chunk, interpret=_interpret())
+    return y.transpose(0, 2, 1, 3), h

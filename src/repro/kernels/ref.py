@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (kernel-layout adapters around
+the model reference implementations in ``repro.models``)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import dense_attention
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, scale, window=0, cap=0.0):
+    """q (B,H,Sq,D), k/v (B,KV,Sk,D) -> (B,H,Sq,D); causal."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    qs = q.transpose(0, 2, 1, 3)  # (B,S,H,D)
+    ks = k.transpose(0, 2, 1, 3)
+    vs = v.transpose(0, 2, 1, 3)
+    q_pos = jnp.broadcast_to(jnp.arange(Sq)[None], (B, Sq))
+    k_pos = jnp.broadcast_to(jnp.arange(Sk)[None], (B, Sk))
+    out = dense_attention(qs, ks, vs, q_pos, k_pos, scale=scale,
+                          window=window, cap=cap)
+    return out.transpose(0, 2, 1, 3)
+
+
+def decode_attention_ref(q, k, v, pos, *, scale, window=0, cap=0.0):
+    """q (B,H,D), k/v (B,KV,S,D), pos (B,) -> (B,H,D)."""
+    B, H, D = q.shape
+    S = k.shape[2]
+    qs = q[:, None]  # (B,1,H,D)
+    ks = k.transpose(0, 2, 1, 3)
+    vs = v.transpose(0, 2, 1, 3)
+    k_pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out = dense_attention(qs, ks, vs, pos[:, None], k_pos, scale=scale,
+                          window=window, cap=cap)
+    return out[:, 0]
+
+
+def ssd_scan_ref(x, dt, a_neg, b_mat, c_mat, *, chunk=256):
+    """Kernel layout (B,H,L,P) -> model layout (B,L,H,P) and back."""
+    y, h = ssd_chunked(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1),
+        a_neg, b_mat, c_mat, chunk)
+    return y.transpose(0, 2, 1, 3), h

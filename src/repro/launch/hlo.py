@@ -1,0 +1,127 @@
+"""Post-SPMD HLO analysis: collective-traffic accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but NOT collective bytes, so we
+parse the compiled HLO text. SPMD HLO shapes are PER-PARTITION, so the wire
+model below yields per-chip traffic directly:
+
+  all-gather        : result × (n-1)/n      (receive everyone else's shard)
+  all-reduce        : 2 × operand × (n-1)/n (ring reduce-scatter + all-gather)
+  reduce-scatter    : operand × (n-1)/n
+  all-to-all        : operand × (n-1)/n
+  collective-permute: operand              (one send + one receive)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("},{")[0].strip("{}")
+        if first:
+            return len(first.split(","))
+    m = _GROUPS_ALT_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 2) -> Dict[str, Dict[str, float]]:
+    """Per-collective-type {count, result_bytes, operand_bytes, wire_bytes}.
+
+    Shapes are per-partition (SPMD), so wire_bytes is per-chip traffic.
+    """
+    # first pass: map instruction name -> result bytes
+    result_bytes: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs starts with the type, e.g. "bf16[8,128]{1,0} all-reduce(..."
+        tm = re.match(r"^(\([^)]*\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)", rhs)
+        if tm:
+            result_bytes[name.lstrip("%")] = _shape_bytes(tm.group(1))
+
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "operand_bytes": 0.0,
+                 "wire_bytes": 0.0})
+
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        op = None
+        for c in COLLECTIVES:
+            # opcode appears right after the result type
+            if re.search(rf"\]\S*\s+{c}(?:-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None:
+            continue
+        if f"{op}-done(" in rhs:
+            continue  # counted at -start
+        name = m.group(1).lstrip("%")
+        rbytes = result_bytes.get(name, 0)
+        # operand bytes: resolve operand names
+        args_m = re.search(rf"{op}(?:-start)?\(([^)]*)\)", rhs)
+        obytes = 0
+        if args_m:
+            for a in args_m.group(1).split(","):
+                a = a.strip().lstrip("%")
+                obytes += result_bytes.get(a, 0)
+        n = _group_size(line, default_group)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if op == "all-gather":
+            wire = rbytes * frac
+        elif op == "all-reduce":
+            wire = 2 * obytes * frac
+        elif op in ("reduce-scatter", "all-to-all"):
+            wire = obytes * frac
+        else:  # collective-permute
+            wire = obytes
+        s = stats[op]
+        s["count"] += 1
+        s["result_bytes"] += rbytes
+        s["operand_bytes"] += obytes
+        s["wire_bytes"] += wire
+    return dict(stats)
+
+
+def total_wire_bytes(stats: Dict[str, Dict[str, float]]) -> float:
+    return sum(s["wire_bytes"] for s in stats.values())

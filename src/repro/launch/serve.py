@@ -1,0 +1,46 @@
+"""Serving launcher: batched generation through the Engine/BatchScheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b \
+        [--requests 6] [--n-new 16] [--s-max 256]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.blocks import RunConfig
+from repro.serve.engine import BatchScheduler, Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--n-new", type=int, default=16)
+    ap.add_argument("--s-max", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    run = RunConfig(attn_impl="dense", remat="none")
+    eng = Engine(cfg, run, s_max=args.s_max)
+    sched = BatchScheduler(eng, max_batch=args.max_batch)
+
+    rng = np.random.default_rng(0)
+    k = cfg.num_codebooks
+    for i in range(args.requests):
+        n = int(rng.integers(8, 48))
+        shape = (n, k) if k else (n,)
+        sched.submit(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
+                     args.n_new)
+    results = sched.run()
+    for rid in sorted(results):
+        toks = results[rid]
+        head = toks[:8].tolist() if toks.ndim == 1 else toks[:2].tolist()
+        print(f"req {rid}: {len(toks)} tokens, head={head}")
+
+
+if __name__ == "__main__":
+    main()

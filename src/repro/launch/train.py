@@ -1,0 +1,61 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        [--reduced] [--steps 100] [--batch 8] [--seq 128] [--plan]
+
+On this CPU container ``--reduced`` (the smoke-scale family member) is the
+realistic setting; the full configs are exercised through the dry-run. With
+``--plan`` the launcher first prints the planner's recommendation and adopts
+its runtime knobs (microbatch / attention impl / remat / optimizer).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import get_config, get_shape, ShapeConfig
+from repro.core.planner import plan as plan_fn
+from repro.models.blocks import RunConfig
+from repro.optim.adamw import OptConfig
+from repro.train.loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--plan", action="store_true",
+                    help="consult the paper-planner for runtime knobs")
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    run = RunConfig(attn_impl="auto", remat="block")
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps)
+    if args.plan:
+        p = plan_fn(cfg, get_shape("train_4k"))
+        print("planner:", p)
+        run = RunConfig(attn_impl="dense" if p.attn_impl == "dense" else "auto",
+                        remat=p.remat, microbatch=min(p.microbatch, args.batch))
+        opt = OptConfig(kind=p.opt_kind, lr=args.lr,
+                        warmup_steps=max(args.steps // 10, 1),
+                        total_steps=args.steps)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"training {cfg.name} ({'reduced' if args.reduced else 'FULL'}) "
+          f"batch={args.batch} seq={args.seq} steps={args.steps}")
+    res = train(cfg, run, opt, batch=args.batch, seq=args.seq,
+                steps=args.steps, ckpt_dir=args.ckpt_dir or None,
+                ckpt_every=50 if args.ckpt_dir else 0)
+    print(f"loss {np.mean(res.losses[:5]):.4f} -> {np.mean(res.losses[-5:]):.4f}; "
+          f"{res.tokens_per_s:,.0f} tok/s; R_O={res.mean_r_o:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Functional optimizers with ZeRO-1-style sharded state.
+
+The paper's parameter-server cluster maps onto the ``data`` mesh axis: each
+data shard owns 1/N of the optimizer state ("pull" = all-gather of updated
+params, "push" = reduce-scatter of grads — both inserted by GSPMD from the
+sharding annotations). ``opt_sharding_rules`` therefore maps the ``embed``
+logical axis onto the data-parallel axes unconditionally, even when the
+bf16 compute params are not FSDP-sharded.
+
+Optimizers: ``adamw`` (default) and ``momentum`` (the paper-era SGD+momentum;
+planner falls back to it when Adam state cannot fit M_bound).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"  # adamw | momentum
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def schedule(opt: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(opt.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - opt.warmup_steps)
+                    / max(opt.total_steps - opt.warmup_steps, 1), 0.0, 1.0)
+    return opt.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+
+
+def init_state(opt: OptConfig, params) -> Dict[str, Any]:
+    zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
+    if opt.kind == "adamw":
+        state["m"] = zeros()
+        state["v"] = zeros()
+    elif opt.kind == "momentum":
+        state["m"] = zeros()
+    else:
+        raise ValueError(opt.kind)
+    return state
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def apply_updates(opt: OptConfig, params, grads, state):
+    """Returns (new_params, new_state, grad_norm). Grads may be bf16; state fp32."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if opt.grad_clip:
+        grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+    else:
+        gnorm = jnp.float32(0)
+    step = state["step"] + 1
+    lr = schedule(opt, step)
+
+    if opt.kind == "adamw":
+        b1, b2 = opt.b1, opt.b2
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                                   state["m"], grads)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                                   state["v"], grads)
+        t = step.astype(jnp.float32)
+        bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + opt.eps)
+            return (p - lr * (u + opt.weight_decay * p)).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, {"step": step, "m": m, "v": v}, gnorm
+
+    # momentum SGD
+    m = jax.tree_util.tree_map(lambda m_, g: opt.momentum * m_ + g,
+                               state["m"], grads)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_: (p - lr * (m_ + opt.weight_decay * p)).astype(p.dtype),
+        params, m)
+    return new_params, {"step": step, "m": m}, gnorm

@@ -1,0 +1,181 @@
+"""Planner-core tests: faithful paper math (Table 2, Lemma 3.1/3.2, Eq. 6 ILP)
+plus hypothesis property tests on the solvers."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import amdahl, ilp, memory_model as mm, ps
+from repro.core.pipeline import StepTimes, multi_device_speedup, simulate_epoch
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful checks
+# ---------------------------------------------------------------------------
+
+
+def test_table2_ratios_close_to_paper():
+    """FFT/GEMM conv memory ratios vs paper Table 2 (<=20% rel. error)."""
+    for row, paper in mm.TABLE2_ROWS:
+        gemm, fft = mm.conv_alg_memory(*row)
+        ours = fft / gemm
+        assert abs(ours - paper) / paper < 0.20, (row, ours, paper)
+
+
+def test_table2_first_layer_near_exact():
+    (row, paper) = mm.TABLE2_ROWS[0]
+    gemm, fft = mm.conv_alg_memory(*row)
+    assert abs(fft / gemm - paper) / paper < 0.02
+
+
+def test_alexnet_feature_shapes():
+    shapes = mm.feature_shapes(mm.ALEXNET)
+    assert shapes[1] == (55, 55, 96)
+    assert shapes[2] == (27, 27, 96)
+    assert shapes[3] == (27, 27, 256)
+    assert shapes[-1] == (6, 6, 256)
+
+
+def test_alexnet_param_count_order():
+    # conv params ~3.7M; classifier ~58.6M (the AlexNet split)
+    conv_params = mm.m_mp(mm.ALEXNET) / (3 * 32)
+    fc_params = sum(
+        mm.ALEXNET.fc[j] * mm.ALEXNET.fc[j + 1]
+        for j in range(len(mm.ALEXNET.fc) - 1))
+    assert 3.0e6 < conv_params < 4.5e6
+    assert 5.5e7 < fc_params < 6.5e7
+
+
+def test_lemma31_paper_examples():
+    # alpha = (1+R_O)/(1+G R_O); paper: 4 GPUs, alpha=0.8 -> R_O <= ~9%
+    assert abs(amdahl.max_overhead_for(4, 0.8) - 1 / 11) < 1e-9
+    # paper: R_O = 10%, 3x speedup -> G = 4
+    assert amdahl.devices_for_speedup(3.0, 0.10) == 4
+
+
+def test_lemma31_matches_amdahl_identity():
+    for g in (1, 2, 4, 8, 64):
+        for r in (0.0, 0.05, 0.3, 1.0):
+            a = amdahl.efficiency(g, r)
+            p = 1.0 / (1.0 + r)  # parallelizable fraction
+            amdahl_speedup = 1.0 / ((1 - p) + p / g)
+            assert math.isclose(a * g, amdahl_speedup, rel_tol=1e-9)
+
+
+def test_lemma32_alexnet_example():
+    """Paper §3.3: AlexNet push ~180 MB; on 1 Gbit Ethernet even one worker
+    cannot be masked behind a sub-second T_C -> N_ps must exceed 1."""
+    s_p = 180e6
+    n = ps.n_parameter_servers(s_p, n_w=1, b_ps=1e9 / 8, t_c=1.0)
+    assert n >= 3  # 2*180MB / 125MB/s = 2.88 s of traffic per second
+    assert ps.masked(s_p, 1, n, 1e9 / 8, 1.0)
+    assert not ps.masked(s_p, 1, n - 1, 1e9 / 8, 1.0)
+
+
+def test_lemma32_monotonicity():
+    base = ps.n_parameter_servers(1e9, 8, 1e9, 1.0)
+    assert ps.n_parameter_servers(2e9, 8, 1e9, 1.0) >= base  # more params
+    assert ps.n_parameter_servers(1e9, 16, 1e9, 1.0) >= base  # more workers
+    assert ps.n_parameter_servers(1e9, 8, 2e9, 1.0) <= base  # more bandwidth
+    assert ps.n_parameter_servers(1e9, 8, 1e9, 2.0) <= base  # longer compute
+
+
+# ---------------------------------------------------------------------------
+# ILP (Eq. 6)
+# ---------------------------------------------------------------------------
+
+
+def _random_layers(rng, n_layers, n_algs):
+    layers = []
+    for k in range(n_layers):
+        choices = []
+        for l in range(n_algs):
+            t = float(rng.uniform(0.1, 10.0))
+            m = float(rng.uniform(1.0, 100.0))
+            choices.append(ilp.Choice(f"a{l}", t, m))
+        layers.append(choices)
+    return layers
+
+
+def _brute_force(layers, m_bound):
+    import itertools
+    best_t, best = math.inf, None
+    for picks in itertools.product(*[range(len(c)) for c in layers]):
+        m = sum(layers[k][l].memory for k, l in enumerate(picks))
+        if m > m_bound:
+            continue
+        t = sum(layers[k][l].time for k, l in enumerate(picks))
+        if t < best_t:
+            best_t, best = t, picks
+    return best_t
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6), st.integers(2, 3),
+       st.floats(0.1, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_ilp_bnb_exact_vs_bruteforce(seed, n_layers, n_algs, tightness):
+    rng = np.random.default_rng(seed)
+    layers = _random_layers(rng, n_layers, n_algs)
+    min_m = sum(min(c.memory for c in ch) for ch in layers)
+    max_m = sum(max(c.memory for c in ch) for ch in layers)
+    m_bound = min_m + tightness * (max_m - min_m)
+    sol = ilp.solve_ilp(layers, m_bound)
+    want = _brute_force(layers, m_bound)
+    assert sol.feasible
+    assert sol.memory <= m_bound + 1e-9
+    assert math.isclose(sol.time, want, rel_tol=1e-9)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8))
+@settings(max_examples=25, deadline=None)
+def test_ilp_dp_feasible_and_close(seed, n_layers):
+    rng = np.random.default_rng(seed)
+    layers = _random_layers(rng, n_layers, 2)
+    min_m = sum(min(c.memory for c in ch) for ch in layers)
+    m_bound = min_m * 1.5
+    exact = ilp.solve_ilp(layers, m_bound)
+    approx = ilp.solve_ilp_dp(layers, m_bound, buckets=8192)
+    assert approx.feasible
+    assert approx.memory <= m_bound + 1e-9
+    # DP discretizes memory upward -> may be slightly conservative
+    assert approx.time >= exact.time - 1e-9
+    assert approx.time <= exact.time * 1.2 + 1e-9
+
+
+def test_ilp_infeasible_flagged():
+    layers = [[ilp.Choice("x", 1.0, 10.0)]]
+    sol = ilp.solve_ilp(layers, 5.0)
+    assert not sol.feasible
+
+
+# ---------------------------------------------------------------------------
+# Pipeline model
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_hides_io_behind_compute():
+    t = StepTimes(data_load=0.05, data_prep=0.03, h2d=0.02, compute=0.5)
+    assert t.r_o() == 0.0  # io sum 0.1 < compute 0.5 -> fully hidden
+    assert t.r_o(pipelined=False) > 0.19
+
+
+def test_pipeline_simulator_monotone_in_g():
+    t = StepTimes(data_load=0.02, h2d=0.01, compute=0.3, param_update=0.02)
+    sp = [multi_device_speedup(t, g) for g in (1, 2, 4, 8)]
+    assert sp[0] == pytest.approx(1.0, rel=0.05)
+    assert all(sp[i] <= sp[i + 1] + 1e-6 for i in range(len(sp) - 1))
+    # saturation: speedup capped by Amdahl ceiling
+    r_o = t.r_o()
+
+
+@given(st.floats(0.01, 0.5), st.floats(0.1, 1.0))
+@settings(max_examples=20, deadline=None)
+def test_simulated_speedup_below_lemma_estimate(io, comp):
+    """Lemma 3.1 with R_O measured from the same StepTimes should upper-bound
+    the simulated weak-scaling speedup (shared-bus contention only hurts)."""
+    t = StepTimes(data_load=io, compute=comp, param_update=io / 4)
+    for g in (2, 4, 8):
+        sim = multi_device_speedup(t, g)
+        est = amdahl.speedup(g, t.r_o(pipelined=True))
+        assert sim <= est * 1.25 + 0.3

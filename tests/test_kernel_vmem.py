@@ -1,0 +1,64 @@
+"""Structural VMEM checks for the Pallas kernels: the per-grid-step working
+set implied by the BlockSpecs must fit TPU v5e VMEM (with headroom for
+double buffering), and block dims must be MXU/lane aligned where the
+architecture's head_dim permits."""
+import pytest
+
+from repro.core.hardware import TPU_V5E
+from repro.configs.base import ARCH_IDS, get_config
+
+VMEM = TPU_V5E.vmem_bytes  # 128 MiB
+BUDGET = VMEM / 2  # double-buffering headroom
+
+
+def flash_working_set(tq, tk, d, dv=None, bytes_in=2):
+    dv = dv or d
+    qkv = (tq * d + tk * d + tk * dv) * bytes_in
+    logits = tq * tk * 4
+    scratch = (tq * dv + 2 * tq) * 4
+    return qkv + logits + scratch
+
+
+def decode_working_set(tk, d, bytes_in=2):
+    return (d + 2 * tk * d) * bytes_in + tk * 4 + (d + 2) * 4
+
+
+def ssd_working_set(q, p, n, bytes_in=2):
+    blocks = (q * p + 2 * q * n + q) * bytes_in
+    qq = q * q * 4
+    scratch = n * p * 4
+    return blocks + qq + scratch + q * p * 4
+
+
+@pytest.mark.parametrize("d", [64, 80, 96, 128])
+def test_flash_attention_blocks_fit_vmem(d):
+    assert flash_working_set(512, 512, d) < BUDGET
+
+
+@pytest.mark.parametrize("d", [64, 96, 128, 576])  # 576 = MLA qk dim
+def test_decode_attention_blocks_fit_vmem(d):
+    assert decode_working_set(512, d) < BUDGET
+
+
+@pytest.mark.parametrize("q,p,n", [(256, 64, 128), (256, 32, 256)])
+def test_ssd_blocks_fit_vmem(q, p, n):
+    assert ssd_working_set(q, p, n) < BUDGET
+
+
+def test_arch_head_dims_mxu_alignment():
+    """Record which archs have lane-aligned (multiple of 128) head dims; the
+    others (head_dim 64/80/96) still satisfy the 8-sublane constraint."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        if cfg.head_dim:
+            assert cfg.head_dim % 8 == 0, (arch, cfg.head_dim)
+        if cfg.ssm_state:
+            assert cfg.ssm_head_dim % 8 == 0
+
+
+def test_flash_grid_covers_any_seq():
+    """Padding logic: grid x block must cover ragged sequence lengths."""
+    for s in (1, 7, 127, 513, 4096):
+        tq = min(512, max(s, 8))
+        nq = -(-s // tq)
+        assert nq * tq >= s

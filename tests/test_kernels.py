@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _mk_qkv(key, B, Sq, Sk, H, KV, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, KV, Sk, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, KV, Sk, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,window,cap,qb,kb",
+    [
+        (2, 128, 4, 4, 64, 0, 0.0, 64, 64),     # MHA
+        (1, 256, 8, 2, 64, 0, 0.0, 128, 64),    # GQA, uneven blocks
+        (2, 96, 4, 2, 32, 0, 0.0, 64, 64),      # padding path (96 % 64 != 0)
+        (1, 256, 4, 4, 64, 64, 0.0, 64, 64),    # sliding window
+        (1, 128, 4, 2, 64, 0, 50.0, 64, 64),    # softcap (gemma2)
+        (1, 128, 4, 2, 128, 48, 30.0, 32, 32),  # window + cap + D=128
+    ],
+)
+def test_flash_attention_matches_oracle(B, S, H, KV, D, window, cap, qb, kb, dtype):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(0), B, S, S, H, KV, D, dtype)
+    scale = 1.0 / np.sqrt(D)
+    out = flash_attention(q, k, v, scale=scale, window=window, cap=cap,
+                          q_block=qb, kv_block=kb, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, scale=scale, window=window, cap=cap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,window,kb",
+    [
+        (2, 256, 4, 4, 64, 0, 64),
+        (3, 300, 8, 2, 64, 0, 128),   # padding + GQA
+        (2, 256, 4, 2, 128, 96, 64),  # sliding window
+    ],
+)
+def test_decode_attention_matches_oracle(B, S, H, KV, D, window, kb, dtype):
+    key = jax.random.PRNGKey(1)
+    q, k, v = _mk_qkv(key, B, 1, S, H, KV, D, dtype)
+    q = q[:, :, 0]  # (B, H, D)
+    pos = jax.random.randint(jax.random.fold_in(key, 7), (B,), 1, S)
+    scale = 1.0 / np.sqrt(D)
+    out = decode_attention(q, k, v, pos, scale=scale, window=window,
+                           kv_block=kb, interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos, scale=scale, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,L,P,N,chunk",
+    [
+        (2, 4, 128, 64, 32, 32),
+        (1, 8, 256, 32, 64, 64),
+        (2, 3, 64, 64, 128, 16),  # odd head count, many chunks
+    ],
+)
+def test_ssd_scan_matches_oracle(B, H, L, P, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = jax.random.normal(ks[0], (B, H, L, P), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, L), jnp.float32))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.5)
+    b = jax.random.normal(ks[3], (B, L, N), jnp.float32).astype(dtype)
+    c = jax.random.normal(ks[4], (B, L, N), jnp.float32).astype(dtype)
+    dt = dt.astype(dtype)
+
+    y, h = ssd_scan(x, dt, a_neg, b, c, chunk=chunk, interpret=True)
+    y_ref, h_ref = ref.ssd_scan_ref(x, dt, a_neg, b, c, chunk=chunk)
+    # bf16: oracle computes intra-chunk einsums in bf16, kernel accumulates
+    # in f32 — tolerance covers the representation gap, not an algorithmic one
+    tol = dict(rtol=5e-2, atol=1e-1) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(h, np.float32),
+                               np.asarray(h_ref, np.float32), **tol)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunk size (algebraic identity)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, H, L, P, N = 1, 2, 128, 32, 16
+    x = jax.random.normal(ks[0], (B, H, L, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, L)))
+    a_neg = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    b = jax.random.normal(ks[3], (B, L, N))
+    c = jax.random.normal(ks[4], (B, L, N))
+    y16, h16 = ssd_scan(x, dt, a_neg, b, c, chunk=16, interpret=True)
+    y64, h64 = ssd_scan(x, dt, a_neg, b, c, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h16), np.asarray(h64), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_matches_chunked_model_path():
+    """Kernel == the model's chunked (XLA flash) path, not just dense."""
+    from repro.models.attention import chunked_attention
+    B, S, H, KV, D = 1, 192, 4, 2, 64
+    q, k, v = _mk_qkv(jax.random.PRNGKey(4), B, S, S, H, KV, D, jnp.float32)
+    scale = 1.0 / np.sqrt(D)
+    out = flash_attention(q, k, v, scale=scale, q_block=64, kv_block=64,
+                          interpret=True)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    want = chunked_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), pos, pos, scale=scale, kv_block=64,
+        q_block=64).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned arch
+(≤2-slot pattern, d_model≤512, ≤4 experts) runs one forward/train step and
+one prefill→decode step on CPU; asserts output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.models.blocks import RunConfig
+from repro.models.common import materialize
+
+BS, SEQ = 2, 128
+
+
+def make_batch(cfg, key):
+    kt, ki = jax.random.split(key)
+    shape = (BS, SEQ, cfg.num_codebooks) if cfg.num_codebooks else (BS, SEQ)
+    tokens = jax.random.randint(kt, shape, 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            ki, (BS, cfg.num_image_tokens, cfg.d_model), jnp.float32
+        ) * 0.02
+    return batch
+
+
+@pytest.fixture(scope="module")
+def run():
+    return RunConfig(attn_impl="auto", remat="block")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch, run):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params = materialize(M.model_specs(cfg), key)
+    batch = make_batch(cfg, key)
+
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, batch, cfg, run), has_aux=True
+    )(params)
+
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    # loss should start near ln(V)
+    assert float(metrics["ce"]) < np.log(cfg.vocab_size) + 2.0
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat), f"{arch}: NaN grads"
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat), f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch, run):
+    cfg = get_config(arch).reduced()
+    key = jax.random.PRNGKey(1)
+    params = materialize(M.model_specs(cfg), key)
+    batch = make_batch(cfg, key)
+
+    logits, _, _ = M.forward(params, batch, cfg, run)
+    S_total = SEQ + (cfg.num_image_tokens or 0)
+    if cfg.num_codebooks:
+        assert logits.shape == (BS, S_total, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (BS, S_total, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    # decode one step from an empty cache at pos 0
+    caches = materialize(M.cache_specs(cfg, BS, s_max=64), jax.random.PRNGKey(2))
+    caches = jax.tree_util.tree_map(jnp.zeros_like, caches)
+    tok = (
+        batch["tokens"][:, :1]
+        if not cfg.num_codebooks
+        else batch["tokens"][:, :1, :]
+    )
+    pos = jnp.zeros((BS,), jnp.int32)
+    dlogits, new_caches = M.decode_step(params, tok, pos, caches, cfg, run)
+    if cfg.num_codebooks:
+        assert dlogits.shape == (BS, 1, cfg.num_codebooks, cfg.vocab_size)
+    else:
+        assert dlogits.shape == (BS, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(dlogits, np.float32)))
+    # cache was actually written
+    changed = jax.tree_util.tree_map(
+        lambda a, b: bool(np.any(np.asarray(a) != np.asarray(b))), caches, new_caches
+    )
+    assert any(jax.tree_util.tree_leaves(changed)), f"{arch}: cache not updated"
+
+
+def test_decode_matches_forward_gqa():
+    """Teacher-forced decode must reproduce full-seq logits (granite, no image)."""
+    cfg = get_config("granite-3-2b").reduced()
+    run = RunConfig(attn_impl="dense", remat="none")
+    key = jax.random.PRNGKey(3)
+    params = materialize(M.model_specs(cfg), key)
+    S = 16
+    tokens = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    full_logits, _, _ = M.forward(params, {"tokens": tokens}, cfg, run)
+
+    caches = jax.tree_util.tree_map(
+        jnp.zeros_like,
+        materialize(M.cache_specs(cfg, 1, s_max=S), key),
+    )
+    outs = []
+    step = jax.jit(lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, run))
+    for i in range(S):
+        lg, caches = step(params, tokens[:, i : i + 1], jnp.array([i]), caches)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32),
+        np.asarray(dec_logits, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_decode_matches_forward_ssm():
+    """Same consistency check for the mamba2 (SSD) path."""
+    cfg = get_config("mamba2-780m").reduced()
+    # chunk must divide S for the forward path
+    cfg = cfg.replace(ssm_chunk=8)
+    run = RunConfig(attn_impl="dense", remat="none")
+    key = jax.random.PRNGKey(4)
+    params = materialize(M.model_specs(cfg), key)
+    S = 16
+    tokens = jax.random.randint(key, (1, S), 0, cfg.vocab_size)
+    full_logits, _, _ = M.forward(params, {"tokens": tokens}, cfg, run)
+
+    caches = jax.tree_util.tree_map(
+        jnp.zeros_like, materialize(M.cache_specs(cfg, 1, s_max=S), key)
+    )
+    outs = []
+    step = jax.jit(lambda p, t, pos, c: M.decode_step(p, t, pos, c, cfg, run))
+    for i in range(S):
+        lg, caches = step(params, tokens[:, i : i + 1], jnp.array([i]), caches)
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full_logits, np.float32),
+        np.asarray(dec_logits, np.float32),
+        rtol=5e-2, atol=5e-2,
+    )
