@@ -11,7 +11,8 @@ import argparse
 import sys
 import time
 
-ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "ilp", "dryrun", "roofline")
+ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "ilp", "dryrun",
+       "roofline")
 
 
 def main() -> None:
@@ -22,7 +23,7 @@ def main() -> None:
     args = ap.parse_args()
     which = [w.strip() for w in args.only.split(",") if w.strip()]
     if args.fast:
-        which = [w for w in which if w not in ("fig2", "fig3", "fig4")]
+        which = [w for w in which if w not in ("fig2", "fig3", "fig4", "sync")]
 
     csv_rows = []
     t0 = time.time()
@@ -37,6 +38,8 @@ def main() -> None:
             from benchmarks import fig4_speedup as m
         elif name == "lemma32":
             from benchmarks import lemma32_ps_sizing as m
+        elif name == "sync":
+            from benchmarks import sync_strategies as m
         elif name == "ilp":
             from benchmarks import ilp_planner as m
         elif name == "dryrun":

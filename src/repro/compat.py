@@ -1,0 +1,34 @@
+"""Version-compat shims for the jax API surface this repo relies on.
+
+jax moved ``shard_map`` out of ``jax.experimental`` (and renamed
+``check_rep`` to ``check_vma``) around 0.5/0.6; this container ships 0.4.x.
+Everything in-repo goes through :func:`shard_map` so both spellings work.
+Kept dependency-free (imports only jax) so any layer may use it.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level, check_vma
+    _new = jax.shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=False)
+except AttributeError:  # jax 0.4.x: experimental, check_rep
+    from jax.experimental.shard_map import shard_map as _old
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)
+
+
+try:  # jax >= 0.6
+    set_mesh = jax.set_mesh
+except AttributeError:  # jax 0.4.x: Mesh is itself the context manager
+    import contextlib
+
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh

@@ -39,11 +39,35 @@ class Plan:
     est_memory_gb: float
     fits: bool
     efficiency: float
+    grad_bytes: float = 0.0  # S_p: fp32 grad payload per TP shard
+    link_bw: float = 0.0  # bytes/s of the mesh's chip interconnect
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
         return dict(attn_impl=self.attn_impl, remat=self.remat,
                     microbatch=self.microbatch)
+
+    def resolve_sync(self, *, link_bw: Optional[float] = None):
+        """Resolve ``sync_schedule`` to a runnable strategy
+        (:class:`repro.distributed.collectives.SyncStrategy`) instead of a
+        string. For the parameter-server schedule the shard count comes from
+        Lemma 3.2 (``ps.n_parameter_servers``) sized for this plan's mesh,
+        payload, and estimated step time."""
+        from repro.distributed.collectives import get_strategy
+
+        if self.sync_schedule in ("-", ""):
+            raise ValueError(f"plan for {self.arch}/{self.shape} has no "
+                             "gradient sync (decode plan?)")
+        n_servers = None
+        if self.sync_schedule == "parameter_server" and self.grad_bytes:
+            dp = self.mesh[0]
+            bw = link_bw or self.link_bw
+            if bw <= 0:
+                raise ValueError("resolve_sync: no link bandwidth on this "
+                                 "Plan; pass link_bw=")
+            t_c = self.est_step_time if math.isfinite(self.est_step_time) else 1.0
+            n_servers = ps.n_parameter_servers(self.grad_bytes, dp, bw, t_c)
+        return get_strategy(self.sync_schedule, n_servers=n_servers)
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +184,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         microbatch=mb, attn_impl=attn_impl, remat=remat, seq_parallel=True,
         opt_kind=opt_kind, sync_schedule=sync.schedule,
         est_step_time=t_best, est_memory_gb=mem.total / 2**30, fits=fits,
-        efficiency=eff, notes=notes,
+        efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp,
+        link_bw=mesh.chip.link_bw, notes=notes,
     )
 
 

@@ -32,9 +32,31 @@ def masked(s_p: float, n_w: int, n_ps: int, b_ps: float, t_c: float) -> bool:
     return io_time(s_p, n_w, n_ps, b_ps) <= t_c
 
 
+# Runnable schedules (executed by repro.distributed.collectives; the planner
+# stores one of these in Plan.sync_schedule and Plan.resolve_sync turns it
+# into the executable strategy).
+SCHEDULES = ("all_reduce", "reduce_scatter_all_gather", "parameter_server")
+
+
+def predicted_comm_time(schedule: str, s_p: float, dp: int, link_bw: float,
+                        *, n_ps: int = 0) -> float:
+    """Lemma 3.2's comm-time prediction for a runnable schedule.
+
+    Ring all-reduce and RS+AG move 2*S_p*(dp-1)/dp per worker; the sharded
+    parameter-server emulation is Eq. 7's server-side bottleneck
+    2*S_p*N_w/(N_ps*B_ps) with N_w = dp workers.
+    """
+    if schedule == "parameter_server":
+        return io_time(s_p, dp, n_ps or dp, link_bw)
+    if schedule in ("all_reduce", "reduce_scatter_all_gather"):
+        frac = (dp - 1) / dp if dp > 1 else 0.0
+        return 2.0 * s_p * frac / link_bw
+    raise KeyError(f"unknown schedule {schedule!r}; known: {SCHEDULES}")
+
+
 @dataclass(frozen=True)
 class SyncPlan:
-    schedule: str  # "all_reduce" | "reduce_scatter_all_gather"
+    schedule: str  # one of SCHEDULES (PS only via explicit request)
     comm_time: float
     compute_time: float
     masked: bool

@@ -1,0 +1,29 @@
+"""Executable gradient-sync runtime — Lemma 3.2 as running code.
+
+The planner (``repro.core.planner``) *chooses* a sync schedule from the
+paper's parameter-server inequality; this package *executes* that choice on
+the mesh data axis and measures what the lemma only predicts:
+
+- :mod:`repro.distributed.collectives` — the strategy zoo (all-reduce,
+  reduce-scatter + all-gather, sharded parameter-server emulation), all
+  expressed over the ``data`` axis via ``shard_map``.
+- :mod:`repro.distributed.compression` — gradient compression (bf16 cast,
+  int8 quantization with error feedback, top-k sparsification) that shrinks
+  S_p before it hits the wire.
+- :mod:`repro.distributed.trainer` — ``DataParallelTrainer``: wraps the
+  instrumented training loop with a chosen strategy, times the sync phase
+  separately from compute, and reports measured-vs-predicted Lemma 3.1/3.2
+  numbers in a :class:`SyncReport`.
+
+Run anything here under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+so the data axis is real (8 simulated devices) rather than napkin math.
+"""
+from repro.distributed.collectives import (  # noqa: F401
+    STRATEGIES, SyncStrategy, get_strategy, flatten_tree, unflatten_tree,
+)
+from repro.distributed.compression import (  # noqa: F401
+    COMPRESSORS, Compressor, get_compressor,
+)
+from repro.distributed.trainer import (  # noqa: F401
+    DataParallelTrainer, SyncReport,
+)

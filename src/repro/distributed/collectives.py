@@ -1,0 +1,156 @@
+"""Gradient-sync strategies over the mesh data axis (Lemma 3.2, executable).
+
+Every strategy is a pure function on a gradient pytree that runs *inside*
+``shard_map`` over the ``data`` axis: it receives this device's local
+gradients and must return the data-axis **mean**, replicated on every
+device. The three members of the zoo differ only in which collectives move
+the bytes — which is exactly the degree of freedom the paper's Lemma 3.2
+prices:
+
+- ``all_reduce``      — one fused all-reduce; wire 2*S_p*(dp-1)/dp per chip.
+- ``reduce_scatter_all_gather`` — explicit reduce-scatter of the flat
+  gradient followed by an all-gather (the ZeRO "N_ps = dp" mapping: each
+  device acts as the parameter server for its 1/dp shard). Same wire bytes
+  as all-reduce, but the two phases are separable/overlappable.
+- ``parameter_server`` — sharded PS push/pull emulation: the flat gradient
+  is split into ``n_servers`` buckets (the count Lemma 3.2 sizes) and each
+  bucket is synchronized by its own collective, emulating one server's
+  push+reduce+pull round. Worker-side wire is the lemma's 2*S_p.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ps as ps_lib
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector helpers (PS sharding and reduce-scatter need a 1-D view)
+# ---------------------------------------------------------------------------
+
+
+def flatten_tree(tree) -> Tuple[jnp.ndarray, Any]:
+    """Concatenate all leaves (as f32) into one 1-D vector. Returns
+    (vector, treedef-with-shapes) for :func:`unflatten_tree`."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(-1) for l in leaves]) if leaves else (
+        jnp.zeros((0,), jnp.float32))
+    return flat, (treedef, shapes)
+
+
+def unflatten_tree(flat: jnp.ndarray, meta) -> Any:
+    treedef, shapes = meta
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for s in shape:
+            n *= s
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Strategy zoo
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SyncStrategy:
+    """A named gradient-sync schedule, executable inside shard_map."""
+
+    name: str
+    # (local_grads, axis_name, dp) -> mean grads, replicated over the axis
+    _sync: Callable[[Any, str, int], Any]
+    n_servers: Optional[int] = None  # parameter_server only
+
+    def sync(self, grads, axis: str, dp: int):
+        return self._sync(grads, axis, dp)
+
+    def wire_bytes(self, s_p: float, dp: int) -> float:
+        """Per-worker wire bytes for one sync of s_p gradient bytes."""
+        if self.name == "parameter_server":
+            return 2.0 * s_p  # push everything out + pull everything back
+        frac = (dp - 1) / dp if dp > 1 else 0.0
+        return 2.0 * s_p * frac  # ring all-reduce == RS + AG
+
+    def predicted_comm_time(self, s_p: float, dp: int, link_bw: float) -> float:
+        """Lemma 3.2's comm-time prediction for this schedule."""
+        return ps_lib.predicted_comm_time(self.name, s_p, dp, link_bw,
+                                          n_ps=self.n_servers or 0)
+
+
+def _all_reduce(grads, axis: str, dp: int):
+    return jax.tree_util.tree_map(
+        lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads)
+
+
+def _reduce_scatter_all_gather(grads, axis: str, dp: int):
+    """ZeRO mapping: RS the flat gradient (each device owns 1/dp of the sum),
+    scale locally, AG the shards back. Bitwise the same mean as all_reduce
+    up to reduction order."""
+    flat, meta = flatten_tree(grads)
+    pad = (-flat.size) % dp
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    shard = jax.lax.psum_scatter(flat, axis, scatter_dimension=0, tiled=True)
+    shard = shard / dp  # each "server" averages its shard (the 1/dp opt work)
+    full = jax.lax.all_gather(shard, axis, axis=0, tiled=True)
+    if pad:
+        full = full[:-pad]
+    return unflatten_tree(full, meta)
+
+
+def _parameter_server(n_servers: int):
+    def sync(grads, axis: str, dp: int):
+        flat, meta = flatten_tree(grads)
+        n = max(min(n_servers, flat.size), 1)
+        # static near-equal bucket sizes (np.array_split semantics)
+        base, rem = divmod(int(flat.size), n)
+        sizes = [base + 1] * rem + [base] * (n - rem)
+        out, off = [], 0
+        for sz in sizes:
+            if sz == 0:
+                continue
+            bucket = flat[off:off + sz]
+            off += sz
+            # one collective per server: the push+reduce+pull round-trip of
+            # Lemma 3.2's Eq. 7, with the 1/N_ps bucket as the payload
+            out.append(jax.lax.psum(bucket, axis) / dp)
+        return unflatten_tree(jnp.concatenate(out), meta)
+
+    return sync
+
+
+def get_strategy(name: str, *, n_servers: Optional[int] = None) -> SyncStrategy:
+    """Resolve a schedule name (as stored in ``Plan.sync_schedule``) to an
+    executable strategy. ``n_servers`` defaults to dp at sync time for the
+    parameter-server emulation; size it with Lemma 3.2
+    (:func:`repro.core.ps.n_parameter_servers`) for a faithful run."""
+    if name == "all_reduce":
+        return SyncStrategy("all_reduce", _all_reduce)
+    if name == "reduce_scatter_all_gather":
+        return SyncStrategy("reduce_scatter_all_gather",
+                            _reduce_scatter_all_gather)
+    if name == "parameter_server":
+        n = n_servers or 0
+        return SyncStrategy(
+            "parameter_server",
+            _parameter_server(n) if n else _ps_dynamic, n_servers=n or None)
+    raise KeyError(f"unknown sync strategy {name!r}; known: {STRATEGIES}")
+
+
+def _ps_dynamic(grads, axis: str, dp: int):
+    # n_servers unspecified: default to dp (ZeRO's N_ps = dp choice)
+    return _parameter_server(dp)(grads, axis, dp)
+
+
+STRATEGIES: Tuple[str, ...] = (
+    "all_reduce", "reduce_scatter_all_gather", "parameter_server",
+)

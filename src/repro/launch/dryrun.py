@@ -33,6 +33,8 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.compat import set_mesh
+
 
 def _planner_defaults(cfg, shape):
     """Runtime knobs for the baseline dry-run (full planner in repro.core)."""
@@ -124,7 +126,7 @@ def build_step_and_args(cfg, shape, mesh, run, *, counting=False,
 
 def lower_compile(fn, args, mesh, donate=()):
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()
@@ -137,6 +139,8 @@ def analyze(compiled, mesh):
     from repro.launch import hlo as hlo_lib
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     out = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),

@@ -103,7 +103,11 @@ def collective_bytes(hlo_text: str, default_group: int = 2) -> Dict[str, Dict[st
         obytes = 0
         if args_m:
             for a in args_m.group(1).split(","):
-                a = a.strip().lstrip("%")
+                a = a.strip()
+                if not a:
+                    continue
+                # operands may be typed ("f32[128] %name") or bare ("%name")
+                a = a.split()[-1].lstrip("%")
                 obytes += result_bytes.get(a, 0)
         n = _group_size(line, default_group)
         frac = (n - 1) / n if n > 1 else 0.0

@@ -23,11 +23,12 @@ from repro.optim import adamw as opt_lib
 # ---------------------------------------------------------------------------
 
 
-def build_train_step(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig):
-    """(params, opt_state, batch) -> (params, opt_state, metrics).
-
-    With ``run.microbatch > 0`` the per-step batch is split into microbatches
-    and gradients are accumulated under a scan (the paper's X_mini knob)."""
+def build_grad_fn(cfg: ModelConfig, run: RunConfig):
+    """(params, batch) -> (loss, metrics, grads), with microbatch gradient
+    accumulation under a scan when ``run.microbatch > 0`` (the paper's X_mini
+    knob). Shared by :func:`build_train_step` and the explicit data-parallel
+    trainer (repro.distributed.trainer), which calls it per device shard
+    inside shard_map."""
 
     if run.bf16_grads:
         # mixed precision: differentiate wrt the bf16 compute params so the
@@ -41,7 +42,7 @@ def build_train_step(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig):
             lambda p, b: M.loss_fn(p, b, cfg, run), has_aux=True
         )
 
-    def train_step(params, opt_state, batch):
+    def grads_of(params, batch):
         if run.microbatch:
             B = batch["tokens"].shape[0]
             n = max(B // run.microbatch, 1)
@@ -61,10 +62,28 @@ def build_train_step(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig):
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
             (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
             grads = jax.tree_util.tree_map(lambda g: g / n, gsum)
-            loss = lsum / n
-            metrics = {}
-        else:
-            (loss, metrics), grads = grad_fn(params, batch)
+            return lsum / n, {}, grads
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    return grads_of
+
+
+def build_train_step(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig,
+                     *, grad_sync=None):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_sync`` (optional) is applied to the gradient pytree between the
+    backward pass and the optimizer update — the hook through which a
+    resolved ``Plan.sync_schedule`` strategy (repro.distributed) runs its
+    collectives when the step executes under shard_map."""
+
+    grads_of = build_grad_fn(cfg, run)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if grad_sync is not None:
+            grads = grad_sync(grads)
         if run.grad_shardings is not None:
             # land grads directly on the ZeRO-1 optimizer-state layout: the
             # data-axis gradient sum becomes a reduce-scatter (1x wire)

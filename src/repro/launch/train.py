@@ -1,16 +1,25 @@
 """Training launcher.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
-        [--reduced] [--steps 100] [--batch 8] [--seq 128] [--plan]
+        [--reduced] [--steps 100] [--batch 8] [--seq 128] [--plan] \
+        [--dp 8 [--sync all_reduce|reduce_scatter_all_gather|parameter_server|auto]
+               [--compress none|bf16|int8|topk]]
 
 On this CPU container ``--reduced`` (the smoke-scale family member) is the
 realistic setting; the full configs are exercised through the dry-run. With
 ``--plan`` the launcher first prints the planner's recommendation and adopts
 its runtime knobs (microbatch / attention impl / remat / optimizer).
+
+``--dp N`` switches to the explicit data-parallel trainer
+(repro.distributed): set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+so the data axis has real (simulated) devices, pick a sync strategy
+(``--sync auto`` resolves the planner's ``Plan.sync_schedule`` to a runnable
+strategy), and a measured-vs-Lemma-3.2 report is printed after training.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
@@ -32,6 +41,14 @@ def main():
     ap.add_argument("--plan", action="store_true",
                     help="consult the paper-planner for runtime knobs")
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--dp", type=int, default=0,
+                    help="run the explicit data-parallel trainer on this many "
+                         "devices (0 = single-process GSPMD loop)")
+    ap.add_argument("--sync", default="auto",
+                    help="gradient-sync strategy, or 'auto' to resolve the "
+                         "planner's sync_schedule")
+    ap.add_argument("--compress", default="none",
+                    help="gradient compression: none|bf16|int8|topk")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -50,9 +67,34 @@ def main():
         cfg = cfg.reduced()
     print(f"training {cfg.name} ({'reduced' if args.reduced else 'FULL'}) "
           f"batch={args.batch} seq={args.seq} steps={args.steps}")
-    res = train(cfg, run, opt, batch=args.batch, seq=args.seq,
-                steps=args.steps, ckpt_dir=args.ckpt_dir or None,
-                ckpt_every=50 if args.ckpt_dir else 0)
+
+    if args.dp:
+        from repro.distributed import DataParallelTrainer
+
+        import jax
+        devs = jax.devices()
+        if len(devs) < args.dp:
+            raise SystemExit(
+                f"--dp {args.dp} but only {len(devs)} devices; set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.dp}")
+        if args.sync == "auto":
+            strategy = plan_fn(cfg if not args.reduced else get_config(args.arch),
+                               get_shape("train_4k")).resolve_sync()
+            print(f"sync resolved from planner: {strategy.name}")
+        else:
+            strategy = args.sync
+        trainer = DataParallelTrainer(
+            cfg, run, opt, strategy=strategy, compression=args.compress,
+            devices=devs[:args.dp])
+        res = trainer.train(batch=args.batch, seq=args.seq, steps=args.steps,
+                            ckpt_dir=args.ckpt_dir or None,
+                            ckpt_every=50 if args.ckpt_dir else 0)
+        rep = trainer.report()
+        print("sync report:", json.dumps(rep.as_dict(), indent=2, default=str))
+    else:
+        res = train(cfg, run, opt, batch=args.batch, seq=args.seq,
+                    steps=args.steps, ckpt_dir=args.ckpt_dir or None,
+                    ckpt_every=50 if args.ckpt_dir else 0)
     print(f"loss {np.mean(res.losses[:5]):.4f} -> {np.mean(res.losses[-5:]):.4f}; "
           f"{res.tokens_per_s:,.0f} tok/s; R_O={res.mean_r_o:.4f}")
 

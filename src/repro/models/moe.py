@@ -167,7 +167,7 @@ def moe_mlp_sharded(p, x, cfg: ModelConfig, *, mesh, axis: str = "model",
     exactly 2 collectives per MoE layer instead of GSPMD's emergent storm.
     """
     from jax.sharding import PartitionSpec as P
-    shard_map = jax.shard_map
+    from repro.compat import shard_map
 
     B, S, D = x.shape
     tp = mesh.shape[axis]
@@ -198,7 +198,6 @@ def moe_mlp_sharded(p, x, cfg: ModelConfig, *, mesh, axis: str = "model",
         in_specs=(P(dp, axis, None), P(), P(axis, None, None),
                   P(axis, None, None), P(axis, None, None)),
         out_specs=(P(dp, axis, None), P()),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
     if cfg.num_shared_experts:
         out = out + dense_mlp(p["shared"], x)

@@ -70,7 +70,10 @@ def ssd_chunked(x, dt, a_neg, b_mat, c_mat, chunk: int, h0=None):
     # intra-chunk: Lmat[h,i,j] = exp(cl_i - cl_j) for i >= j (decay j+1..i)
     diff = cl[:, :, :, None, :] - cl[:, :, None, :, :]  # (B,nc,Q(i),Q(j),H)
     causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
-    lmat = jnp.where(causal, jnp.exp(diff), 0.0)
+    # mask BEFORE the exp: for i < j the exponent cl_i - cl_j is positive and
+    # can overflow to inf, which the where() would drop in the forward pass
+    # but turn into 0 * inf = NaN in the backward pass
+    lmat = jnp.exp(jnp.where(causal, diff, -jnp.inf))
     cb = jnp.einsum("bcin,bcjn->bcij", cr, br)  # (B,nc,Q,Q)
     w = cb[..., None] * lmat * dtr[:, :, None, :, :]  # (B,nc,i,j,H)
     y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xr)

@@ -42,7 +42,11 @@ def schedule(opt: OptConfig, step):
     return opt.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
 
 
-def init_state(opt: OptConfig, params) -> Dict[str, Any]:
+def init_state(opt: OptConfig, params, *,
+               error_feedback: bool = False) -> Dict[str, Any]:
+    """``error_feedback=True`` adds an ``"ef"`` slot (zeros_like params) for
+    gradient-compression residuals (repro.distributed.compression); it rides
+    through :func:`apply_updates` untouched, like any extra state key."""
     zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
     state: Dict[str, Any] = {"step": jnp.zeros((), jnp.int32)}
     if opt.kind == "adamw":
@@ -52,6 +56,8 @@ def init_state(opt: OptConfig, params) -> Dict[str, Any]:
         state["m"] = zeros()
     else:
         raise ValueError(opt.kind)
+    if error_feedback:
+        state["ef"] = zeros()
     return state
 
 
@@ -86,7 +92,8 @@ def apply_updates(opt: OptConfig, params, grads, state):
             return (p - lr * (u + opt.weight_decay * p)).astype(p.dtype)
 
         new_params = jax.tree_util.tree_map(upd, params, m, v)
-        return new_params, {"step": step, "m": m, "v": v}, gnorm
+        new_state = dict(state, step=step, m=m, v=v)
+        return new_params, new_state, gnorm
 
     # momentum SGD
     m = jax.tree_util.tree_map(lambda m_, g: opt.momentum * m_ + g,
@@ -94,4 +101,4 @@ def apply_updates(opt: OptConfig, params, grads, state):
     new_params = jax.tree_util.tree_map(
         lambda p, m_: (p - lr * (m_ + opt.weight_decay * p)).astype(p.dtype),
         params, m)
-    return new_params, {"step": step, "m": m}, gnorm
+    return new_params, dict(state, step=step, m=m), gnorm

@@ -44,7 +44,15 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
           loader: Optional[PrefetchLoader] = None,
           ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
           log_every: int = 10,
-          params=None, opt_state=None) -> TrainResult:
+          params=None, opt_state=None,
+          step_fn: Optional[Callable] = None,
+          batch_sharding: Optional[Dict[str, Any]] = None) -> TrainResult:
+    """``step_fn`` (optional) replaces the default jitted train step with a
+    caller-built executor — e.g. repro.distributed.DataParallelTrainer's
+    phase-split step. It may attach host-side phase timings to metrics as
+    plain floats under ``t_comm`` / ``t_update``; they are split out of
+    compute into StepTimes.dist_update / .param_update. ``batch_sharding``
+    maps input names to shardings for the loader's h2d step."""
     key = jax.random.PRNGKey(seed)
     if params is None:
         params = materialize(M.model_specs(cfg), key)
@@ -52,9 +60,12 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
         opt_state = opt_lib.init_state(opt, params)
     own_loader = loader is None
     if loader is None:
-        loader = PrefetchLoader(cfg, batch, seq, seed=seed)
+        loader = PrefetchLoader(cfg, batch, seq, seed=seed,
+                                sharding=batch_sharding)
 
-    step_fn = jax.jit(build_train_step(cfg, run, opt), donate_argnums=(0, 1))
+    if step_fn is None:
+        step_fn = jax.jit(build_train_step(cfg, run, opt),
+                          donate_argnums=(0, 1))
 
     losses: List[float] = []
     times: List[StepTimes] = []
@@ -67,10 +78,13 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
             params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
             loss = float(metrics["loss"])  # blocks
             t_comp = time.perf_counter() - t0
+            t_comm = float(metrics.pop("t_comm", 0.0))
+            t_upd = float(metrics.pop("t_update", 0.0))
             losses.append(loss)
             times.append(StepTimes(
                 data_load=bt.data_load, data_prep=bt.data_prep, h2d=bt.h2d,
-                compute=t_comp))
+                compute=max(t_comp - t_comm - t_upd, 0.0),
+                param_update=t_upd, dist_update=t_comm))
             if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
                 if pending_ckpt is not None:
                     pending_ckpt.join()

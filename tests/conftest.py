@@ -1,0 +1,33 @@
+"""Shared test plumbing.
+
+- ``run_sub``: run a snippet in a fresh subprocess with
+  ``--xla_force_host_platform_device_count`` set (the parent pytest process
+  has already locked jax to 1 device, so multi-device tests must re-exec).
+- The ``slow`` marker (registered in pytest.ini) keeps tier-1
+  (``pytest -x -q``) to the fast subset; ``pytest -m ""`` runs everything.
+"""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_sub(body: str, devices: int = 8, timeout: int = 520) -> str:
+    script = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(body)
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        # JAX_PLATFORMS=cpu is load-bearing: without it jax probes the TPU
+        # backend and libtpu retries GCP metadata fetches for ~8 MINUTES
+        # before falling back to CPU
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=timeout,
+    )
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout

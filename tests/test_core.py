@@ -4,7 +4,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import amdahl, ilp, memory_model as mm, ps
 from repro.core.pipeline import StepTimes, multi_device_speedup, simulate_epoch

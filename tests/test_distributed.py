@@ -1,28 +1,7 @@
 """Distributed-correctness tests. Each test runs in a subprocess with
 --xla_force_host_platform_device_count set (the parent pytest process has
 already locked jax to 1 device)."""
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
-REPO = Path(__file__).resolve().parent.parent
-
-
-def run_sub(body: str, devices: int = 8, timeout: int = 520):
-    script = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
-        + textwrap.dedent(body)
-    )
-    r = subprocess.run(
-        [sys.executable, "-c", script],
-        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
-        capture_output=True, text=True, timeout=timeout,
-    )
-    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
-    return r.stdout
+from conftest import run_sub
 
 
 def test_moe_sharded_matches_baseline():
@@ -99,7 +78,8 @@ def test_sharded_train_step_matches_single_device():
                for k, v in batch.items()}
     run_s = RunConfig(attn_impl="dense", remat="none",
                       act_sharding=NamedSharding(mesh, P(("data",), "model", None)))
-    with jax.set_mesh(mesh):
+    from repro.compat import set_mesh
+    with set_mesh(mesh):
         p2, s2, m2 = jax.jit(build_train_step(cfg, run_s, opt))(
             params_s, state_s, batch_s)
 

@@ -4,7 +4,11 @@ counting-mode extrapolation identity."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.attention import _ring_positions, quantize_kv, dequantize_kv
 from repro.models import moe as moe_lib

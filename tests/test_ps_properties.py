@@ -1,0 +1,95 @@
+"""Property-style coverage for core/ps.py (Lemma 3.2) — plain parametrized
+sweeps, no hypothesis dependency, so these always run in tier-1."""
+import math
+
+import pytest
+
+from repro.core import ps
+
+
+GRID_SP = (1e6, 1e8, 4e9)
+GRID_NW = (1, 2, 8, 64)
+GRID_BW = (1e9 / 8, 10e9 / 8, 100e9 / 8)
+GRID_TC = (0.05, 0.5, 5.0)
+
+
+@pytest.mark.parametrize("s_p", GRID_SP)
+@pytest.mark.parametrize("n_w", GRID_NW)
+@pytest.mark.parametrize("b_ps", GRID_BW)
+@pytest.mark.parametrize("t_c", GRID_TC)
+def test_masked_iff_io_fits_in_compute(s_p, n_w, b_ps, t_c):
+    """`masked` ⇔ io_time <= t_c, and the Lemma-sized server count always
+    achieves masking (that is the inequality's whole point)."""
+    n_ps = ps.n_parameter_servers(s_p, n_w, b_ps, t_c)
+    assert ps.masked(s_p, n_w, n_ps, b_ps, t_c) == (
+        ps.io_time(s_p, n_w, n_ps, b_ps) <= t_c)
+    assert ps.masked(s_p, n_w, n_ps, b_ps, t_c), (
+        "Lemma 3.2's own N_ps must hide I/O behind compute")
+    # one server fewer must NOT mask (minimality), unless already at 1 or the
+    # ceil'd bound exceeds the exact bound only by rounding
+    if n_ps > 1 and not ps.masked(s_p, n_w, n_ps - 1, b_ps, t_c):
+        assert ps.io_time(s_p, n_w, n_ps - 1, b_ps) > t_c
+
+
+def test_n_parameter_servers_monotone_in_n_w_and_s_p():
+    b_ps, t_c = 10e9 / 8, 0.5
+    prev = 0
+    for n_w in sorted(GRID_NW):
+        cur = ps.n_parameter_servers(1e9, n_w, b_ps, t_c)
+        assert cur >= prev
+        prev = cur
+    prev = 0
+    for s_p in sorted(GRID_SP):
+        cur = ps.n_parameter_servers(s_p, 16, b_ps, t_c)
+        assert cur >= prev
+        prev = cur
+
+
+def test_n_parameter_servers_validates_inputs():
+    with pytest.raises(ValueError):
+        ps.n_parameter_servers(1e9, 4, 0.0, 1.0)
+    with pytest.raises(ValueError):
+        ps.n_parameter_servers(1e9, 4, 1e9, 0.0)
+    assert ps.n_parameter_servers(0.0, 4, 1e9, 1.0) == 1  # floor at 1
+
+
+def test_io_time_scales_inversely_with_servers():
+    t1 = ps.io_time(1e9, 16, 1, 1e9)
+    for n in (2, 4, 8):
+        assert math.isclose(ps.io_time(1e9, 16, n, 1e9), t1 / n, rel_tol=1e-12)
+
+
+def test_tpu_grad_sync_plan_dp1_edge():
+    """dp=1: no data axis, zero wire bytes, always masked."""
+    plan = ps.tpu_grad_sync_plan(8e9, 1, 1e11, t_c=0.001)
+    assert plan.comm_time == 0.0
+    assert plan.masked
+    assert "0.00 GB" in plan.note
+
+
+@pytest.mark.parametrize("dp", (2, 4, 16, 256))
+def test_tpu_grad_sync_plan_wire_accounting(dp):
+    param_bytes, bw = 8e9, 1e11
+    plan = ps.tpu_grad_sync_plan(param_bytes, dp, bw, t_c=1.0)
+    wire = 2.0 * param_bytes * (dp - 1) / dp
+    assert math.isclose(plan.comm_time, wire / bw, rel_tol=1e-12)
+    assert f"dp={dp}" in plan.note
+    # schedule flag flips with zero_sharded
+    assert plan.schedule == "reduce_scatter_all_gather"
+    assert ps.tpu_grad_sync_plan(param_bytes, dp, bw, t_c=1.0,
+                                 zero_sharded=False).schedule == "all_reduce"
+
+
+def test_predicted_comm_time_consistency():
+    """The runnable-schedule predictions agree with the closed forms."""
+    s_p, dp, bw = 2e9, 8, 1e10
+    ar = ps.predicted_comm_time("all_reduce", s_p, dp, bw)
+    rs = ps.predicted_comm_time("reduce_scatter_all_gather", s_p, dp, bw)
+    assert ar == rs == 2.0 * s_p * (dp - 1) / dp / bw
+    # PS defaults to N_ps = dp; explicit n_ps follows Eq. 7
+    assert ps.predicted_comm_time("parameter_server", s_p, dp, bw) == \
+        ps.io_time(s_p, dp, dp, bw)
+    assert ps.predicted_comm_time("parameter_server", s_p, dp, bw, n_ps=4) == \
+        ps.io_time(s_p, dp, 4, bw)
+    with pytest.raises(KeyError):
+        ps.predicted_comm_time("bogus", s_p, dp, bw)
