@@ -1,12 +1,36 @@
 """§Dry-run: consolidated table over results/dryrun/*.json (both meshes) —
 proof that every (arch × shape × mesh) lowers + compiles, with per-chip
-memory and collective mix. Writes results/dryrun_summary.md."""
+memory and collective mix. Writes results/dryrun_summary.md plus
+results/dryrun_report.json, one unified ``repro.api.Report`` per compiled
+combination (spec + analytic plan/predictions + the XLA measurements)."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
 from repro.configs.base import ARCH_IDS, SHAPES
+
+
+def _unified_reports(records):
+    """One kind="dryrun" Report per compiled combo: the analytic planner
+    prediction next to what XLA actually measured at compile time."""
+    from repro.api import Session, JobSpec
+
+    reports = []
+    for (arch, shape, mesh_kind), r in records:
+        rep = Session(JobSpec(arch=arch, reduced=False, shape=shape,
+                              mesh=mesh_kind)).dryrun()
+        f = r.get("full", {})
+        rep.measured = {
+            "ok": bool(r.get("ok")),
+            "variant": r.get("variant", ""),
+            "compile_s": f.get("compile_s", 0.0),
+            "memory": f.get("memory", {}),
+            "derived": r.get("derived", {}),
+        }
+        rep.meta["benchmark"] = "dryrun_summary"
+        reports.append(rep.validate().to_dict())
+    return reports
 
 
 def run(csv_rows=None, write_md=True):
@@ -18,6 +42,7 @@ def run(csv_rows=None, write_md=True):
         "|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     n_ok = n_all = 0
+    records = []
     for arch in ARCH_IDS:
         for shape in SHAPES:
             for mesh in ("single", "multi"):
@@ -25,6 +50,7 @@ def run(csv_rows=None, write_md=True):
                 if not p.exists():
                     continue
                 r = json.loads(p.read_text())
+                records.append(((arch, shape, mesh), r))
                 n_all += 1
                 if not r.get("ok"):
                     lines.append(f"| {arch} | {shape} | {mesh} | **FAIL** | "
@@ -48,6 +74,11 @@ def run(csv_rows=None, write_md=True):
     if write_md:
         Path("results/dryrun_summary.md").write_text("\n".join(lines) + "\n")
     print(f"dry-run summary: {n_ok}/{n_all} ok -> results/dryrun_summary.md")
+    if records:
+        out = Path("results/dryrun_report.json")
+        out.write_text(json.dumps({"reports": _unified_reports(records)},
+                                  indent=2, default=str))
+        print(f"unified reports -> {out}")
     if csv_rows is not None:
         csv_rows.append(("dryrun/ok_fraction", n_ok / max(n_all, 1), f"{n_ok}/{n_all}"))
 

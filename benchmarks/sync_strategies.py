@@ -2,12 +2,17 @@
 
 Runs the explicit data-parallel trainer (repro.distributed) on 8 simulated
 host devices for every sync strategy and compressor, checks each variant's
-parameter updates against the single-device baseline, and emits a JSON
-report with the measured comm time next to the Lemma 3.2 prediction:
+parameter updates against the single-device baseline, and emits the unified
+``repro.api.Report`` JSON (spec + plan + measured + predicted; the grid
+lives under ``measured.runs``) with the measured comm time next to the
+Lemma 3.2 prediction:
 
     PYTHONPATH=src python -m benchmarks.sync_strategies \
-        [--steps 6] [--batch 16] [--seq 64] [--devices 8] \
+        [--steps 6] [--batch 16] [--seq 64] [--devices 8] [--quick] \
         [--out results/sync_strategies.json]
+
+``--quick`` is the CI smoke setting: 2 devices, 2 steps, tiny batch, no
+compression grid — just enough to prove the public surface end to end.
 
 Also callable from the harness (``python -m benchmarks.run --only sync``),
 where it re-execs itself in a subprocess so the forced device count applies
@@ -34,6 +39,7 @@ def _bench(args) -> dict:
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.api import JobSpec, Report, Session
     from repro.configs.base import get_config
     from repro.core import ps as ps_lib
     from repro.distributed import DataParallelTrainer
@@ -46,6 +52,10 @@ def _bench(args) -> dict:
     from repro.optim.adamw import OptConfig, init_state
     from repro.train.loop import train
 
+    spec = JobSpec(arch=args.arch, reduced=True, steps=args.steps,
+                   batch=args.batch, seq=args.seq, dp=args.devices,
+                   sync="auto", log_every=0)
+    sess = Session(spec)
     cfg = get_config(args.arch).reduced()
     opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=args.steps)
     run = RunConfig(attn_impl="dense", remat="none")
@@ -64,15 +74,17 @@ def _bench(args) -> dict:
     p_ref, _, m_ref = step(base_params, base_state, batch1)
     p_ref = jax.tree_util.tree_map(np.asarray, p_ref)
 
-    report = {"devices": dp, "arch": cfg.name, "batch": args.batch,
-              "seq": args.seq, "steps": args.steps,
-              "baseline_tokens_per_s": base.tokens_per_s,
-              "lemma32": {}, "runs": []}
+    # unified-Report measured block: the single-device baseline is the
+    # headline measurement; the strategy grid lives under "runs"
+    measured = base.summary()
+    measured["baseline_tokens_per_s"] = base.tokens_per_s
+    measured["devices"] = dp
+    measured["runs"] = []
 
     for strat_name in STRATEGIES:
         for comp_name in COMPRESSORS:
-            if comp_name != "none" and strat_name != "all_reduce" \
-                    and not args.full_grid:
+            if comp_name != "none" and (args.quick or strat_name != "all_reduce"
+                                        and not args.full_grid):
                 continue  # compression is strategy-independent; sample once
             tr = DataParallelTrainer(cfg, run, opt, strategy=strat_name,
                                      compression=comp_name,
@@ -102,7 +114,7 @@ def _bench(args) -> dict:
                 tolerance={"rtol": rtol, "atol": atol},
                 loss_first=float(res.losses[0]), loss_last=float(res.losses[-1]),
                 tokens_per_s=res.tokens_per_s, r_o=res.mean_r_o)
-            report["runs"].append(entry)
+            measured["runs"].append(entry)
             print(f"{strat_name:26s} {comp_name:5s} "
                   f"comm {rep.measured_comm_s*1e3:7.1f}ms "
                   f"(lemma {rep.predicted_comm_s*1e3:7.1f}ms) "
@@ -113,9 +125,11 @@ def _bench(args) -> dict:
     # the lemma's sizing view for this payload on the emulated link
     s_p = 4.0 * sum(int(np.prod(a.shape))
                     for a in jax.tree_util.tree_leaves(base_params))
-    t_c = report["runs"][0]["measured_compute_s"] if report["runs"] else 1.0
+    t_c = (measured["runs"][0]["measured_compute_s"]
+           if measured["runs"] else 1.0)
     from repro.distributed.trainer import DEFAULT_LINK_BW
-    report["lemma32"] = {
+    predicted = sess.plan().predicted
+    predicted["lemma32_emulated"] = {
         "s_p_bytes": s_p, "t_c_s": t_c, "link_bw": DEFAULT_LINK_BW,
         "n_parameter_servers": ps_lib.n_parameter_servers(
             s_p, dp, DEFAULT_LINK_BW, max(t_c, 1e-6)),
@@ -124,7 +138,13 @@ def _bench(args) -> dict:
                                                          DEFAULT_LINK_BW)
             for name in STRATEGIES},
     }
-    return report
+    meta = sess.report_meta()
+    meta.update(benchmark="sync_strategies", quick=bool(args.quick),
+                run_config={"attn_impl": run.attn_impl, "remat": run.remat})
+    return Report(kind="bench", spec=spec.to_dict(),
+                  plan=sess.resolved_plan.to_dict(),
+                  measured=measured, predicted=predicted,
+                  meta=meta).validate().to_dict()
 
 
 def main(argv=None):
@@ -136,8 +156,13 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--full-grid", action="store_true",
                     help="run every strategy x compression combination")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 2 devices, 2 steps, tiny batch, "
+                         "no compression grid")
     ap.add_argument("--out", default="results/sync_strategies.json")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.devices, args.steps, args.batch, args.seq = 2, 2, 4, 32
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
@@ -167,7 +192,7 @@ def run(csv_rows):
         print("sync benchmark failed", file=sys.stderr)
         return
     rep = json.loads(out.read_text())
-    for run_ in rep["runs"]:
+    for run_ in rep["measured"]["runs"]:
         key = f"sync/{run_['strategy']}/{run_['compression']}"
         csv_rows.append((f"{key}/measured_comm_s", run_["measured_comm_s"],
                          f"predicted={run_['predicted_comm_s']:.4f}"))

@@ -1,31 +1,36 @@
-"""Quickstart: train a tiny decoder on the synthetic corpus, checkpoint it,
-and generate a few tokens — the whole public API in ~40 lines.
+"""Quickstart: the whole public API is one JobSpec.
+
+Plan, train (with checkpoints), and serve a tiny decoder through the
+``repro.api`` facade; every call returns the same Report schema.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+from repro.api import JobSpec, Session
 
-from repro.configs.base import get_config
-from repro.models.blocks import RunConfig
-from repro.optim.adamw import OptConfig
-from repro.serve.engine import Engine
-from repro.train.loop import train
+spec = JobSpec(arch="granite-3-2b", reduced=True,  # same family, laptop-sized
+               steps=60, batch=8, seq=64, lr=3e-3,
+               ckpt_dir="results/quickstart_ckpt", ckpt_every=30,
+               s_max=128, n_new=8, requests=2)
+sess = Session(spec)
 
-cfg = get_config("granite-3-2b").reduced()  # same family, laptop-sized
-run = RunConfig(attn_impl="dense", remat="none")
-opt = OptConfig(lr=3e-3, warmup_steps=10, total_steps=100)
+print(f"== plan: {sess.resolved_plan.sync_schedule} sync, "
+      f"microbatch {sess.resolved_plan.microbatch} (full-size job)")
 
-print(f"== training reduced {cfg.name}: d={cfg.d_model} L={cfg.num_layers} "
-      f"V={cfg.vocab_size}")
-result = train(cfg, run, opt, batch=8, seq=64, steps=60,
-               ckpt_dir="results/quickstart_ckpt", ckpt_every=30)
-print(f"loss {result.losses[0]:.3f} -> {result.losses[-1]:.3f}; "
-      f"{result.tokens_per_s:,.0f} tok/s; pipeline R_O={result.mean_r_o:.3f}")
+print(f"== training reduced {sess.cfg.name}: d={sess.cfg.d_model} "
+      f"L={sess.cfg.num_layers} V={sess.cfg.vocab_size}")
+rep = sess.train()
+m = rep.measured
+print(f"loss {m['losses'][0]:.3f} -> {m['losses'][-1]:.3f}; "
+      f"{m['tokens_per_s']:,.0f} tok/s; pipeline R_O={m['r_o']:.3f}")
+rep.save("results/quickstart_train_report.json")
 
 print("== generating")
-eng = Engine(cfg, run, s_max=128)
-prompt = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16)).astype(np.int32)
-res = eng.generate(prompt, n_new=8)
-print("tokens:", res.tokens)
-print(f"prefill {res.prefill_s*1e3:.0f} ms, decode {res.decode_s*1e3:.0f} ms, "
-      f"{res.tokens_per_s:.1f} tok/s")
+srep = sess.serve()
+for r in srep.measured["per_request"]:
+    print(f"req {r['rid']}: head={r['head']}")
+print(f"{srep.measured['n_tokens']} tokens in "
+      f"{srep.measured['wall_s']*1e3:.0f} ms "
+      f"({srep.measured['tokens_per_s']:.1f} tok/s)")
+srep.save("results/quickstart_serve_report.json")
+print("reports: results/quickstart_{train,serve}_report.json "
+      "(one schema: spec + plan + measured + predicted)")

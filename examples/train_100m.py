@@ -1,6 +1,7 @@
 """End-to-end driver: train a ~100M-parameter decoder for a few hundred
-steps on the synthetic corpus with the instrumented pipeline, reporting the
-paper's quantities (R_O, Lemma-3.1 efficiency projection, Lemma-3.2 sizing).
+steps through the ``repro.api`` facade, reporting the paper's quantities
+(R_O, Lemma-3.1 efficiency projection, Lemma-3.2 sizing) straight from the
+unified Report.
 
     PYTHONPATH=src python examples/train_100m.py [--steps 300] [--arch granite-3-2b]
 """
@@ -8,12 +9,10 @@ import argparse
 
 import numpy as np
 
+from repro.api import JobSpec, Session
 from repro.configs.base import get_config
-from repro.core import amdahl, ps
+from repro.core import ps
 from repro.core.memory_model import n_params
-from repro.models.blocks import RunConfig
-from repro.optim.adamw import OptConfig
-from repro.train.loop import train
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=300)
@@ -31,21 +30,24 @@ cfg = cfg.replace(num_layers=16 - 16 % len(cfg.pattern))
 print(f"== {cfg.name} ~{n_params(cfg)/1e6:.0f}M params, "
       f"{cfg.num_layers}L d={cfg.d_model} V={cfg.padded_vocab}")
 
-run = RunConfig(attn_impl="auto", remat="block")
-opt = OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
-res = train(cfg, run, opt, batch=args.batch, seq=args.seq, steps=args.steps,
-            ckpt_dir="results/train_100m_ckpt", ckpt_every=100, log_every=20)
+spec = JobSpec(arch=args.arch, reduced=True, steps=args.steps,
+               batch=args.batch, seq=args.seq, lr=3e-3, log_every=20,
+               ckpt_dir="results/train_100m_ckpt", ckpt_every=100)
+rep = Session(spec, config=cfg).train()
 
-print(f"\nloss {np.mean(res.losses[:10]):.3f} -> {np.mean(res.losses[-10:]):.3f}")
-print(f"throughput {res.tokens_per_s:,.0f} tok/s")
+m = rep.measured
+print(f"\nloss {np.mean(m['losses'][:10]):.3f} -> "
+      f"{np.mean(m['losses'][-10:]):.3f}")
+print(f"throughput {m['tokens_per_s']:,.0f} tok/s")
 
-r_o = res.mean_r_o
-print(f"\n== paper quantities from measured step times ==")
-print(f"R_O (pipelined) = {r_o:.4f}")
-for g in (2, 4, 8, 16):
-    print(f"  Lemma 3.1: G={g:3d} -> efficiency {amdahl.efficiency(g, r_o):.3f}, "
-          f"speedup {amdahl.speedup(g, r_o):.2f}x")
-t_c = float(np.median([t.compute for t in res.step_times]))
+print(f"\n== paper quantities from the unified Report ==")
+print(f"R_O (pipelined) = {m['r_o']:.4f}")
+lemma31 = rep.predicted["lemma31"]
+for g, v in lemma31["per_device"].items():
+    print(f"  Lemma 3.1: G={int(g):3d} -> efficiency {v['efficiency']:.3f}, "
+          f"speedup {v['speedup']:.2f}x")
+t_c = m["step_times_mean"]["compute"]
 s_p = 4.0 * n_params(cfg)
 n_ps = ps.n_parameter_servers(s_p, n_w=8, b_ps=10e9 / 8, t_c=t_c)
 print(f"  Lemma 3.2: S_p={s_p/1e6:.0f} MB, 8 workers, 10 Gbit -> N_ps={n_ps}")
+print(f"report -> {rep.save('results/train_100m_report.json')}")

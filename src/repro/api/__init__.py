@@ -1,0 +1,24 @@
+"""repro.api — one Experiment/Session facade from plan to train/serve/bench.
+
+The paper's procedure (pick minibatch + algorithms, size the mesh and the
+parameter servers, run) as a single declarative API:
+
+    from repro.api import JobSpec, Session
+
+    sess = Session(JobSpec(arch="granite-3-2b", reduced=True, steps=60))
+    print(sess.plan().predicted["lemma32"])     # sized before running
+    rep = sess.train()                          # measured Report
+    rep.save("results/train_report.json")       # one schema everywhere
+
+Every entry point — ``repro.launch.train``/``serve``, ``benchmarks/*``,
+``examples/*`` — goes through this facade, and every artifact is a
+:class:`Report` validated by :func:`validate_report`.
+"""
+from repro.api.report import KINDS, Report, SCHEMA_ID, validate_report
+from repro.api.session import Session
+from repro.api.spec import COMPRESSIONS, JobSpec, MESHES, SYNCS
+
+__all__ = [
+    "JobSpec", "Session", "Report", "validate_report",
+    "SCHEMA_ID", "KINDS", "MESHES", "SYNCS", "COMPRESSIONS",
+]

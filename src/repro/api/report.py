@@ -1,0 +1,114 @@
+"""Report — the one JSON artifact every entry point emits.
+
+FireCaffe and the Shi et al. performance-modeling line treat *configuration
+-> predicted cost -> measured run* as a single pipeline whose predictions and
+measurements must land in one comparable record.  ``Report`` is that record:
+
+    {"schema": "repro.api/report/v1",
+     "kind":   plan | dryrun | train | serve | bench,
+     "spec":      the JobSpec that produced it,
+     "plan":      the planner's Plan (runtime knobs + Lemma 3.1/3.2 inputs),
+     "measured":  StepTimes means / SyncReport / serving stats (empty for
+                  the purely predictive kinds),
+     "predicted": Lemma 3.1 efficiency/speedup + Lemma 3.2 comm time +
+                  the napkin step-time model,
+     "meta":      free-form provenance}
+
+``validate_report`` is the shared schema check used by the tests and CI —
+every benchmark's JSON must pass it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, Union
+
+SCHEMA_ID = "repro.api/report/v1"
+KINDS = ("plan", "dryrun", "train", "serve", "bench")
+
+# kinds whose `measured` section must be populated, and the keys that make a
+# measurement comparable across entry points (bench artifacts range from a
+# full trajectory to a throughput sweep, so only the headline is required)
+_MEASURED_REQUIRED = {
+    "train": ("steps", "loss_last", "tokens_per_s", "r_o", "step_times_mean"),
+    "bench": ("tokens_per_s",),
+    "serve": ("requests", "tokens_per_s"),
+}
+_SPEC_REQUIRED = ("arch", "shape", "reduced", "steps", "batch", "seq", "seed")
+_PLAN_REQUIRED = ("arch", "mesh", "microbatch", "attn_impl", "remat",
+                  "sync_schedule", "est_step_time")
+_PREDICTED_REQUIRED = ("lemma31", "lemma32")
+
+
+@dataclass
+class Report:
+    kind: str
+    spec: Dict[str, Any]
+    plan: Dict[str, Any]
+    measured: Dict[str, Any] = field(default_factory=dict)
+    predicted: Dict[str, Any] = field(default_factory=dict)
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        return {"schema": SCHEMA_ID, **d}
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, default=str)
+
+    def save(self, path: Union[str, Path]) -> Path:
+        p = Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(self.to_json())
+        return p
+
+    def validate(self) -> "Report":
+        validate_report(self.to_dict())
+        return self
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Report":
+        validate_report(d)
+        return cls(kind=d["kind"], spec=d["spec"], plan=d["plan"],
+                   measured=d.get("measured", {}),
+                   predicted=d.get("predicted", {}), meta=d.get("meta", {}))
+
+    @classmethod
+    def from_json(cls, s: str) -> "Report":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Shared schema check (hand-rolled: no jsonschema dependency in the image)
+# ---------------------------------------------------------------------------
+
+
+def _require(cond: bool, msg: str):
+    if not cond:
+        raise ValueError(f"invalid Report: {msg}")
+
+
+def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Raise ValueError unless ``d`` is a valid v1 Report dict; returns it."""
+    _require(isinstance(d, dict), f"expected dict, got {type(d).__name__}")
+    for key in ("schema", "kind", "spec", "plan", "measured", "predicted"):
+        _require(key in d, f"missing top-level key {key!r}")
+    _require(d["schema"] == SCHEMA_ID,
+             f"schema {d['schema']!r} != {SCHEMA_ID!r}")
+    _require(d["kind"] in KINDS, f"kind {d['kind']!r} not in {KINDS}")
+    for sect in ("spec", "plan", "measured", "predicted"):
+        _require(isinstance(d[sect], dict), f"{sect} must be a dict")
+    for key in _SPEC_REQUIRED:
+        _require(key in d["spec"], f"spec missing {key!r}")
+    for key in _PLAN_REQUIRED:
+        _require(key in d["plan"], f"plan missing {key!r}")
+    for key in _PREDICTED_REQUIRED:
+        _require(key in d["predicted"], f"predicted missing {key!r}")
+    need = _MEASURED_REQUIRED.get(d["kind"], ())
+    for key in need:
+        _require(key in d["measured"],
+                 f"measured missing {key!r} for kind {d['kind']!r}")
+    return d

@@ -1,0 +1,272 @@
+"""Session — resolve a :class:`JobSpec` through the planner and execute it.
+
+One object owns the whole Fig.-1 procedure: the planner sizes the job
+(microbatch, algorithms, sync schedule — Lemmas 3.1/3.2), then ``train`` /
+``serve`` / ``bench`` run it and ``dryrun`` / ``plan`` stop at the
+prediction.  Every method returns the same :class:`repro.api.Report`, so a
+planner prediction and a measured run are directly comparable artifacts.
+
+The planner always runs on the FULL architecture and the spec's production
+shape/mesh — the paper's procedure sizes the real job; with
+``spec.reduced`` the *execution* uses the smoke-scale family member.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.api.report import Report
+from repro.api.spec import JobSpec
+from repro.configs.base import ModelConfig, get_config, get_shape
+from repro.core import amdahl, memory_model as mm, ps as ps_lib
+from repro.core.hardware import MULTI_POD, SINGLE_POD
+from repro.core.planner import Plan, estimate_step_time, plan as plan_fn
+
+# Lemma 3.1 efficiency/speedup are reported for these device counts (the
+# paper's Fig. 4 sweep)
+LEMMA31_G = (2, 4, 8, 16)
+
+
+class Session:
+    """Execute one JobSpec; every method returns a validated Report."""
+
+    def __init__(self, spec: JobSpec, *, config: Optional[ModelConfig] = None):
+        self.spec = spec
+        self.cfg_full = get_config(spec.arch)
+        self.cfg = config if config is not None else (
+            self.cfg_full.reduced() if spec.reduced else self.cfg_full)
+        self.shape = get_shape(spec.shape)
+        self.mesh_spec = SINGLE_POD if spec.mesh == "single" else MULTI_POD
+        self._config_override = config is not None
+        self._plan: Optional[Plan] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_plan(self) -> Plan:
+        if self._plan is None:
+            self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec)
+        return self._plan
+
+    def build_run_opt(self):
+        """RunConfig/OptConfig for this spec — planner-adopted knobs when
+        ``use_planner`` (exactly what ``launch/train.py --plan`` did)."""
+        from repro.models.blocks import RunConfig
+        from repro.optim.adamw import OptConfig
+
+        spec = self.spec
+        warmup = max(spec.steps // 10, 1)
+        if spec.use_planner:
+            p = self.resolved_plan
+            run = RunConfig(
+                attn_impl="dense" if p.attn_impl == "dense" else "auto",
+                remat=p.remat, microbatch=min(p.microbatch, spec.batch))
+            opt = OptConfig(kind=p.opt_kind, lr=spec.lr, warmup_steps=warmup,
+                            total_steps=spec.steps)
+        else:
+            run = RunConfig(attn_impl="auto", remat="block")
+            opt = OptConfig(lr=spec.lr, warmup_steps=warmup,
+                            total_steps=spec.steps)
+        return run, opt
+
+    # ------------------------------------------------------------------
+    # Predictive kinds
+    # ------------------------------------------------------------------
+    def plan(self) -> Report:
+        """Resolve the planner only: spec + plan + Lemma predictions."""
+        return self._report("plan", {}, self._predicted())
+
+    def dryrun(self) -> Report:
+        """Analytic dry run — plan plus the step-time roofline terms and
+        the memory-model breakdown, no compile and no training.  (The
+        heavyweight lower+compile sweep stays in ``repro.launch.dryrun``.)"""
+        p = self.resolved_plan
+        pred = self._predicted()
+        dp, tp = self.mesh_spec.dp, self.mesh_spec.tp
+        if self.shape.kind in ("train", "prefill"):
+            mem = mm.train_memory(
+                self.cfg_full, self.shape, dp=dp, tp=tp, fsdp=p.fsdp,
+                microbatch=p.microbatch, attn_impl=p.attn_impl, remat=p.remat,
+                seq_parallel=p.seq_parallel, opt_kind=p.opt_kind)
+        else:
+            mem = mm.decode_memory(self.cfg_full, self.shape, dp=dp, tp=tp,
+                                   fsdp=p.fsdp)
+        pred["memory_bytes"] = {
+            k: float(getattr(mem, k))
+            for k in ("params", "grads", "opt_state", "activations",
+                      "logits", "kv_cache")}
+        pred["memory_bytes"]["total"] = float(mem.total)
+        pred["fits"] = p.fits
+        return self._report("dryrun", {}, pred)
+
+    # ------------------------------------------------------------------
+    # Measured kinds
+    # ------------------------------------------------------------------
+    def train(self) -> Report:
+        """Run the training loop (single-process GSPMD, or the explicit
+        data-parallel trainer when ``spec.dp > 0``)."""
+        return self._run_train("train")
+
+    def bench(self) -> Report:
+        """A measured run reported as a benchmark artifact: identical
+        execution to :meth:`train`, kind ``bench`` (no logging by default
+        conventions is up to the spec)."""
+        return self._run_train("bench")
+
+    def _run_train(self, kind: str) -> Report:
+        spec = self.spec
+        run, opt = self.build_run_opt()
+        loop_kw = dict(batch=spec.batch, seq=spec.seq, steps=spec.steps,
+                       seed=spec.seed, log_every=spec.log_every,
+                       ckpt_dir=spec.ckpt_dir or None,
+                       ckpt_every=spec.ckpt_every)
+        sync_rep = None
+        if spec.dp:
+            import jax
+
+            from repro.distributed import DataParallelTrainer
+
+            devs = jax.devices()
+            if len(devs) < spec.dp:
+                raise RuntimeError(
+                    f"dp={spec.dp} but only {len(devs)} devices visible; set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{spec.dp}")
+            kw = dict(compression=spec.compress, devices=devs[:spec.dp])
+            if spec.sync == "auto":
+                trainer = DataParallelTrainer.from_plan(
+                    self.resolved_plan, self.cfg, run, opt, **kw)
+            else:
+                trainer = DataParallelTrainer(self.cfg, run, opt,
+                                              strategy=spec.sync, **kw)
+            res = trainer.train(**loop_kw)
+            sync_rep = trainer.report()
+        else:
+            from repro.train.loop import train as train_loop
+
+            res = train_loop(self.cfg, run, opt, **loop_kw)
+        measured = res.summary()
+        if sync_rep is not None:
+            measured["sync"] = sync_rep.as_dict()
+        predicted = self._predicted(measured_r_o=measured["r_o"])
+        return self._report(kind, measured, predicted)
+
+    def serve(self) -> Report:
+        """Batched generation: synthetic ragged requests through the
+        Engine/BatchScheduler, measured end to end."""
+        from repro.models.blocks import RunConfig
+        from repro.serve.engine import BatchScheduler, Engine
+
+        spec, cfg = self.spec, self.cfg
+        run = RunConfig(attn_impl="dense", remat="none")
+        eng = Engine(cfg, run, s_max=spec.s_max, seed=spec.seed)
+        sched = BatchScheduler(eng, max_batch=spec.max_batch)
+        rng = np.random.default_rng(spec.seed)
+        k = cfg.num_codebooks
+        lengths = []
+        for _ in range(spec.requests):
+            n = int(rng.integers(8, 48))
+            shape = (n, k) if k else (n,)
+            sched.submit(
+                rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
+                spec.n_new)
+            lengths.append(n)
+        t0 = time.perf_counter()
+        results = sched.run()
+        wall = time.perf_counter() - t0
+        per_request = []
+        for rid in sorted(results):
+            toks = np.asarray(results[rid])
+            head = toks[:8].tolist() if toks.ndim == 1 else toks[:2].tolist()
+            per_request.append({"rid": rid, "tokens": int(toks.shape[0]),
+                                "head": head})
+        n_tokens = sum(r["tokens"] for r in per_request)
+        measured = {
+            "requests": spec.requests,
+            "n_new": spec.n_new,
+            "prompt_lengths": lengths,
+            "n_tokens": n_tokens,
+            "wall_s": wall,
+            "tokens_per_s": n_tokens / max(wall, 1e-9),
+            "batches": [g.stats() for g in sched.history],
+            "per_request": per_request,
+        }
+        return self._report("serve", measured, self._predicted())
+
+    # ------------------------------------------------------------------
+    # Shared prediction / report assembly
+    # ------------------------------------------------------------------
+    def _predicted(self, *, measured_r_o: Optional[float] = None) -> Dict:
+        p = self.resolved_plan
+        out: Dict[str, Any] = {
+            "est_step_time_s": p.est_step_time,
+            "est_memory_gb": p.est_memory_gb,
+            "efficiency_planned": p.efficiency,
+        }
+        # roofline terms (train-kind shapes only; decode is memory-bound)
+        r_o_model = 0.0
+        if self.shape.kind in ("train", "prefill"):
+            terms = estimate_step_time(self.cfg_full, self.shape,
+                                       self.mesh_spec, p.remat,
+                                       max(p.microbatch, 1))
+            out["step_time_terms"] = terms
+            r_o_model = (max(terms["collective"] + terms["memory"]
+                             - terms["compute"], 0.0)
+                         / max(terms["compute"], 1e-9))
+        # Lemma 3.1: efficiency/speedup curve from the best available R_O
+        r_o = measured_r_o if measured_r_o is not None else r_o_model
+        out["lemma31"] = {
+            "r_o": r_o,
+            "source": "measured" if measured_r_o is not None else "model",
+            "per_device": {
+                str(g): {"efficiency": amdahl.efficiency(g, r_o),
+                         "speedup": amdahl.speedup(g, r_o)}
+                for g in LEMMA31_G},
+        }
+        # Lemma 3.2: comm-time prediction for the planned schedule
+        if p.sync_schedule in ("-", "") or not p.grad_bytes or p.link_bw <= 0:
+            out["lemma32"] = {"schedule": p.sync_schedule or "-"}
+        else:
+            dp = p.mesh[0]
+            t_c = (p.est_step_time if math.isfinite(p.est_step_time) else 1.0)
+            n_ps = ps_lib.n_parameter_servers(p.grad_bytes, dp, p.link_bw,
+                                              max(t_c, 1e-9))
+            comm = ps_lib.predicted_comm_time(
+                p.sync_schedule, p.grad_bytes, dp, p.link_bw, n_ps=n_ps)
+            out["lemma32"] = {
+                "schedule": p.sync_schedule,
+                "dp": dp,
+                "grad_bytes": p.grad_bytes,
+                "link_bw": p.link_bw,
+                "n_parameter_servers": n_ps,
+                "predicted_comm_s": comm,
+                "t_c_s": t_c,
+                "masked": comm <= t_c,
+            }
+        return out
+
+    def report_meta(self) -> Dict[str, Any]:
+        """Provenance block shared by every Report this session emits —
+        benchmarks that hand-build a Report must attach it too, so the
+        artifact records the config that actually executed (which, with a
+        ``config=`` override or ``reduced=True``, differs from the arch the
+        spec/plan name)."""
+        return {
+            "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "executed_config": {
+                "name": self.cfg.name,
+                "d_model": self.cfg.d_model,
+                "num_layers": self.cfg.num_layers,
+                "vocab_size": self.cfg.vocab_size,
+                "n_params": int(mm.n_params(self.cfg)),
+            },
+            "config_override": self._config_override,
+        }
+
+    def _report(self, kind: str, measured: Dict, predicted: Dict) -> Report:
+        return Report(kind=kind, spec=self.spec.to_dict(),
+                      plan=self.resolved_plan.to_dict(),
+                      measured=measured, predicted=predicted,
+                      meta=self.report_meta()).validate()

@@ -1,0 +1,94 @@
+"""JobSpec — the one declarative object that names a job end to end.
+
+The paper's procedure is: pick the minibatch size and per-layer algorithms,
+size the mesh and the parameter servers, then run.  A :class:`JobSpec` is
+that procedure written down once: architecture + input shape + mesh, the
+data-parallel degree and gradient-sync/compression choice, and the run
+extent (steps/batch/seq/seed).  ``Session`` resolves it through the planner
+and executes it; every entry point (launchers, benchmarks, examples) builds
+one of these instead of hand-plumbing ``get_config -> plan -> RunConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import Any, Dict
+
+from repro.configs.base import ARCH_IDS, SHAPES
+from repro.core import ps as ps_lib
+
+MESHES = ("single", "multi")
+SYNCS = ("auto",) + ps_lib.SCHEDULES
+# names mirror repro.distributed.compression.COMPRESSORS (kept import-light
+# here: the registry pulls in jax, and a spec must be constructible without
+# touching a backend)
+COMPRESSIONS = ("none", "bf16", "int8", "topk")
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """Declarative description of one job (train / serve / bench / dryrun)."""
+
+    arch: str
+    reduced: bool = True          # reduced family member vs FULL config
+    shape: str = "train_4k"       # planner ShapeConfig name
+    mesh: str = "single"          # planner mesh: single | multi pod
+    steps: int = 100
+    batch: int = 8
+    seq: int = 128
+    lr: float = 1e-3
+    seed: int = 0
+    use_planner: bool = False     # adopt planner knobs (microbatch/attn/remat/opt)
+    dp: int = 0                   # >0: explicit data-parallel trainer on dp devices
+    sync: str = "auto"            # gradient-sync schedule, or planner-resolved
+    compress: str = "none"        # gradient compression
+    ckpt_dir: str = ""
+    ckpt_every: int = 0
+    log_every: int = 10
+    # serving knobs
+    s_max: int = 256              # decode cache length
+    max_batch: int = 4            # scheduler batch size
+    n_new: int = 16               # tokens generated per request
+    requests: int = 6             # synthetic request count
+
+    def __post_init__(self):
+        if self.arch not in ARCH_IDS:
+            raise ValueError(f"unknown arch {self.arch!r}; known: {ARCH_IDS}")
+        if self.shape not in SHAPES:
+            raise ValueError(f"unknown shape {self.shape!r}; "
+                             f"known: {sorted(SHAPES)}")
+        if self.mesh not in MESHES:
+            raise ValueError(f"mesh must be one of {MESHES}, got {self.mesh!r}")
+        if self.sync not in SYNCS:
+            raise ValueError(f"sync must be one of {SYNCS}, got {self.sync!r}")
+        if self.compress not in COMPRESSIONS:
+            raise ValueError(f"compress must be one of {COMPRESSIONS}, "
+                             f"got {self.compress!r}")
+        for name in ("steps", "batch", "seq", "s_max", "max_batch", "n_new",
+                     "requests"):
+            if getattr(self, name) <= 0:
+                raise ValueError(f"{name} must be > 0")
+        if self.dp < 0:
+            raise ValueError("dp must be >= 0 (0 = single-process loop)")
+        if self.dp and self.batch % self.dp:
+            raise ValueError(f"batch {self.batch} not divisible by dp={self.dp}")
+
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "JobSpec":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "JobSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    @classmethod
+    def from_json(cls, s: str) -> "JobSpec":
+        return cls.from_dict(json.loads(s))

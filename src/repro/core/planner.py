@@ -13,6 +13,8 @@ Given (arch config, input shape, mesh spec) it:
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -46,6 +48,31 @@ class Plan:
     def run_config_kwargs(self) -> Dict:
         return dict(attn_impl=self.attn_impl, remat=self.remat,
                     microbatch=self.microbatch)
+
+    def to_job_kwargs(self) -> Dict:
+        """Every runtime knob a Session/launcher adopts from this plan:
+        the RunConfig knobs plus optimizer kind and the sync schedule."""
+        return dict(self.run_config_kwargs(), opt_kind=self.opt_kind,
+                    sync=self.sync_schedule)
+
+    # -- round-trip serialization (benchmark artifacts carry the plan) -----
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Plan":
+        known = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        kw["mesh"] = tuple(kw["mesh"])
+        kw["notes"] = list(kw.get("notes", []))
+        return cls(**kw)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Plan":
+        return cls.from_dict(json.loads(s))
 
     def resolve_sync(self, *, link_bw: Optional[float] = None):
         """Resolve ``sync_schedule`` to a runnable strategy

@@ -108,6 +108,18 @@ class DataParallelTrainer:
         self._build_phases()
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_plan(cls, plan, cfg: ModelConfig, run: RunConfig,
+                  opt: opt_lib.OptConfig, *,
+                  compression: Union[str, Compressor] = "none",
+                  devices: Optional[List] = None,
+                  link_bw: float = DEFAULT_LINK_BW) -> "DataParallelTrainer":
+        """Trainer whose sync strategy comes from a planner ``Plan`` —
+        ``resolve_sync()`` supplies the Lemma-3.2-sized strategy instance."""
+        return cls(cfg, run, opt, strategy=plan.resolve_sync(),
+                   compression=compression, devices=devices, link_bw=link_bw)
+
+    # ------------------------------------------------------------------
     def _build_phases(self):
         grads_of = build_grad_fn(self.cfg, self.run)
         strat, comp, dp = self.strategy, self.compressor, self.dp

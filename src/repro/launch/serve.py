@@ -1,17 +1,16 @@
-"""Serving launcher: batched generation through the Engine/BatchScheduler.
+"""Serving launcher — a thin CLI over the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b \
-        [--requests 6] [--n-new 16] [--s-max 256]
+        [--requests 6] [--n-new 16] [--s-max 256] [--report-out PATH]
+
+Flags map onto a :class:`repro.api.JobSpec`; batched generation through the
+Engine/BatchScheduler happens inside :meth:`repro.api.Session.serve`.
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from repro.configs.base import get_config
-from repro.models.blocks import RunConfig
-from repro.serve.engine import BatchScheduler, Engine
+from repro.api import JobSpec, Session
 
 
 def main():
@@ -21,25 +20,21 @@ def main():
     ap.add_argument("--n-new", type=int, default=16)
     ap.add_argument("--s-max", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--report-out", default="",
+                    help="write the unified Report JSON here")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch).reduced()
-    run = RunConfig(attn_impl="dense", remat="none")
-    eng = Engine(cfg, run, s_max=args.s_max)
-    sched = BatchScheduler(eng, max_batch=args.max_batch)
-
-    rng = np.random.default_rng(0)
-    k = cfg.num_codebooks
-    for i in range(args.requests):
-        n = int(rng.integers(8, 48))
-        shape = (n, k) if k else (n,)
-        sched.submit(rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
-                     args.n_new)
-    results = sched.run()
-    for rid in sorted(results):
-        toks = results[rid]
-        head = toks[:8].tolist() if toks.ndim == 1 else toks[:2].tolist()
-        print(f"req {rid}: {len(toks)} tokens, head={head}")
+    spec = JobSpec(arch=args.arch, reduced=True, shape="decode_32k",
+                   requests=args.requests, n_new=args.n_new,
+                   s_max=args.s_max, max_batch=args.max_batch)
+    rep = Session(spec).serve()
+    for r in rep.measured["per_request"]:
+        print(f"req {r['rid']}: {r['tokens']} tokens, head={r['head']}")
+    print(f"{rep.measured['n_tokens']} tokens in "
+          f"{rep.measured['wall_s']*1e3:.0f} ms "
+          f"({rep.measured['tokens_per_s']:.1f} tok/s)")
+    if args.report_out:
+        print(f"wrote {rep.save(args.report_out)}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,20 @@
-"""Training launcher.
+"""Training launcher — a thin CLI over the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
-        [--reduced] [--steps 100] [--batch 8] [--seq 128] [--plan] \
+        [--reduced | --full] [--steps 100] [--batch 8] [--seq 128] [--plan] \
         [--dp 8 [--sync all_reduce|reduce_scatter_all_gather|parameter_server|auto]
-               [--compress none|bf16|int8|topk]]
+               [--compress none|bf16|int8|topk]] [--report-out PATH]
 
-On this CPU container ``--reduced`` (the smoke-scale family member) is the
-realistic setting; the full configs are exercised through the dry-run. With
-``--plan`` the launcher first prints the planner's recommendation and adopts
-its runtime knobs (microbatch / attention impl / remat / optimizer).
-
-``--dp N`` switches to the explicit data-parallel trainer
-(repro.distributed): set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-so the data axis has real (simulated) devices, pick a sync strategy
-(``--sync auto`` resolves the planner's ``Plan.sync_schedule`` to a runnable
-strategy), and a measured-vs-Lemma-3.2 report is printed after training.
+Flags map 1:1 onto a :class:`repro.api.JobSpec`; the actual procedure
+(planner resolution, strategy sizing, the loop) lives in
+:class:`repro.api.Session`.  On this CPU container ``--reduced`` (the
+smoke-scale family member, the default) is the realistic setting; disable it
+with ``--full`` (or ``--no-reduced``).  With ``--plan`` the session adopts
+the planner's runtime knobs (microbatch / attention impl / remat /
+optimizer).  ``--dp N`` switches to the explicit data-parallel trainer: set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the data axis has
+real (simulated) devices; ``--sync auto`` resolves the planner's
+``Plan.sync_schedule`` to a runnable strategy.
 """
 from __future__ import annotations
 
@@ -23,17 +23,27 @@ import json
 
 import numpy as np
 
-from repro.configs.base import get_config, get_shape, ShapeConfig
-from repro.core.planner import plan as plan_fn
-from repro.models.blocks import RunConfig
-from repro.optim.adamw import OptConfig
-from repro.train.loop import train
+from repro.api import JobSpec, Session
 
 
-def main():
+def build_spec(args) -> JobSpec:
+    return JobSpec(
+        arch=args.arch, reduced=args.reduced, steps=args.steps,
+        batch=args.batch, seq=args.seq, lr=args.lr,
+        use_planner=args.plan, dp=args.dp, sync=args.sync,
+        compress=args.compress, ckpt_dir=args.ckpt_dir,
+        ckpt_every=50 if args.ckpt_dir else 0)
+
+
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="train the reduced family member (default); "
+                         "--full / --no-reduced for the full config")
+    ap.add_argument("--full", dest="reduced", action="store_false",
+                    help="alias for --no-reduced")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -49,54 +59,34 @@ def main():
                          "planner's sync_schedule")
     ap.add_argument("--compress", default="none",
                     help="gradient compression: none|bf16|int8|topk")
-    args = ap.parse_args()
+    ap.add_argument("--report-out", default="",
+                    help="write the unified Report JSON here")
+    return ap
 
-    cfg = get_config(args.arch)
-    run = RunConfig(attn_impl="auto", remat="block")
-    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
-                    total_steps=args.steps)
+
+def main():
+    args = build_parser().parse_args()
+    sess = Session(build_spec(args))
     if args.plan:
-        p = plan_fn(cfg, get_shape("train_4k"))
-        print("planner:", p)
-        run = RunConfig(attn_impl="dense" if p.attn_impl == "dense" else "auto",
-                        remat=p.remat, microbatch=min(p.microbatch, args.batch))
-        opt = OptConfig(kind=p.opt_kind, lr=args.lr,
-                        warmup_steps=max(args.steps // 10, 1),
-                        total_steps=args.steps)
-    if args.reduced:
-        cfg = cfg.reduced()
+        print("planner:", sess.resolved_plan)
+    cfg = sess.cfg
     print(f"training {cfg.name} ({'reduced' if args.reduced else 'FULL'}) "
           f"batch={args.batch} seq={args.seq} steps={args.steps}")
+    if args.dp and args.sync == "auto":
+        print(f"sync resolved from planner: "
+              f"{sess.resolved_plan.sync_schedule}")
 
-    if args.dp:
-        from repro.distributed import DataParallelTrainer
-
-        import jax
-        devs = jax.devices()
-        if len(devs) < args.dp:
-            raise SystemExit(
-                f"--dp {args.dp} but only {len(devs)} devices; set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={args.dp}")
-        if args.sync == "auto":
-            strategy = plan_fn(cfg if not args.reduced else get_config(args.arch),
-                               get_shape("train_4k")).resolve_sync()
-            print(f"sync resolved from planner: {strategy.name}")
-        else:
-            strategy = args.sync
-        trainer = DataParallelTrainer(
-            cfg, run, opt, strategy=strategy, compression=args.compress,
-            devices=devs[:args.dp])
-        res = trainer.train(batch=args.batch, seq=args.seq, steps=args.steps,
-                            ckpt_dir=args.ckpt_dir or None,
-                            ckpt_every=50 if args.ckpt_dir else 0)
-        rep = trainer.report()
-        print("sync report:", json.dumps(rep.as_dict(), indent=2, default=str))
-    else:
-        res = train(cfg, run, opt, batch=args.batch, seq=args.seq,
-                    steps=args.steps, ckpt_dir=args.ckpt_dir or None,
-                    ckpt_every=50 if args.ckpt_dir else 0)
-    print(f"loss {np.mean(res.losses[:5]):.4f} -> {np.mean(res.losses[-5:]):.4f}; "
-          f"{res.tokens_per_s:,.0f} tok/s; R_O={res.mean_r_o:.4f}")
+    rep = sess.train()
+    if "sync" in rep.measured:
+        print("sync report:", json.dumps(rep.measured["sync"], indent=2,
+                                         default=str))
+    m = rep.measured
+    losses = m["losses"]
+    print(f"loss {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}; "
+          f"{m['tokens_per_s']:,.0f} tok/s; R_O={m['r_o']:.4f}")
+    if args.report_out:
+        path = rep.save(args.report_out)
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -73,6 +73,14 @@ class GenResult:
     decode_s: float
     tokens_per_s: float
 
+    def stats(self) -> Dict[str, float]:
+        """Measured serving numbers for a ``repro.api.Report``."""
+        return {"batch": int(self.tokens.shape[0]),
+                "n_new": int(self.tokens.shape[1]),
+                "prefill_s": float(self.prefill_s),
+                "decode_s": float(self.decode_s),
+                "tokens_per_s": float(self.tokens_per_s)}
+
 
 class Engine:
     def __init__(self, cfg: ModelConfig, run: RunConfig, params=None, *,
@@ -158,6 +166,7 @@ class BatchScheduler:
         self.max_batch = max_batch
         self.pending: List[Request] = []
         self._next_id = 0
+        self.history: List[GenResult] = []  # per-batch stats of the last run()
 
     def submit(self, prompt: np.ndarray, n_new: int) -> int:
         rid = self._next_id
@@ -167,6 +176,7 @@ class BatchScheduler:
 
     def run(self) -> Dict[int, np.ndarray]:
         results: Dict[int, np.ndarray] = {}
+        self.history = []
         while self.pending:
             batch = self.pending[: self.max_batch]
             self.pending = self.pending[self.max_batch :]
@@ -180,6 +190,7 @@ class BatchScheduler:
                 prompts[i, : r.prompt.shape[0]] = r.prompt
                 lengths[i] = r.prompt.shape[0]
             res = self.engine.generate(prompts, n_new, lengths=lengths)
+            self.history.append(res)
             for i, r in enumerate(batch):
                 results[r.rid] = res.tokens[i, : r.n_new]
         return results

@@ -6,6 +6,11 @@ h2d come from the PrefetchLoader; param+distributed update are inside the
 jitted train_step and are folded into compute on a single host, while their
 *modeled* costs come from the planner's SyncPlan). The loop emits StepTimes
 so R_O and Lemma 3.1/3.2 can be evaluated on real measurements.
+
+Entry points should go through ``repro.api`` (JobSpec -> Session -> Report)
+rather than importing :func:`train` directly; the direct import stays
+supported for library composition (the Session itself uses it) but is a
+deprecation candidate for scripts — see README "One API".
 """
 from __future__ import annotations
 
@@ -37,6 +42,26 @@ class TrainResult:
     def mean_r_o(self) -> float:
         ros = [t.r_o() for t in self.step_times[2:]]
         return float(np.mean(ros)) if ros else 0.0
+
+    def summary(self) -> Dict[str, Any]:
+        """The measured block of a ``repro.api.Report``: loss trajectory,
+        throughput, R_O, and steady-state (warmup-excluded) means of every
+        Fig.-1 step."""
+        from repro.core.pipeline import STEP_NAMES
+
+        steady = self.step_times[2:] or self.step_times
+        means = {name: float(np.mean([getattr(t, name) for t in steady]))
+                 for name in STEP_NAMES} if steady else {}
+        head, tail = self.losses[:5], self.losses[-5:]
+        return {
+            "steps": len(self.losses),
+            "loss_first": float(np.mean(head)) if head else float("nan"),
+            "loss_last": float(np.mean(tail)) if tail else float("nan"),
+            "losses": [float(l) for l in self.losses],
+            "tokens_per_s": float(self.tokens_per_s),
+            "r_o": self.mean_r_o,
+            "step_times_mean": means,
+        }
 
 
 def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,

@@ -6,10 +6,16 @@
 - The ``slow`` marker (registered in pytest.ini) keeps tier-1
   (``pytest -x -q``) to the fast subset; ``pytest -m ""`` runs everything.
 """
+import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
+
+# Pin the in-process backend before anything imports jax: without it jax
+# probes the TPU backend (libtpu is installed) and stalls ~8 min in
+# GCP-metadata retries on non-TPU hosts.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 REPO = Path(__file__).resolve().parent.parent
 
