@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "ilp", "dryrun",
-       "roofline")
+ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "sweep", "ilp",
+       "dryrun", "roofline")
 
 
 def main() -> None:
@@ -40,6 +40,8 @@ def main() -> None:
             from benchmarks import lemma32_ps_sizing as m
         elif name == "sync":
             from benchmarks import sync_strategies as m
+        elif name == "sweep":
+            from benchmarks import sweep as m
         elif name == "ilp":
             from benchmarks import ilp_planner as m
         elif name == "dryrun":

@@ -1,0 +1,89 @@
+"""Campaign sweep — the paper's configuration guidelines as one grid.
+
+Fans a scenario grid (sync x dp x topology x batch ...) out through
+``Session.sweep`` and writes the :class:`repro.api.Campaign` artifact
+(``repro.api/campaign/v1``: one validated ``repro.api/report/v1`` per cell
+plus the Pareto summary of throughput vs efficiency):
+
+    PYTHONPATH=src python -m benchmarks.sweep \
+        [--arch granite-3-2b] [--kind plan|dryrun|train] [--quick]
+        [--out results/sweep_campaign.json]
+
+``--quick`` is the CI smoke cell: 1 arch x 2 sync x 2 dp *training* runs
+(2 steps, tiny batch, 2 simulated devices, CPU-pinned) — just enough to
+prove the campaign surface end to end.  The default (no ``--quick``) is a
+predictive plan-mode sweep over topologies and batch sizes, cheap enough
+for a laptop.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from pathlib import Path
+
+
+def _grids(args):
+    if args.quick:
+        return {"sync": ["all_reduce", "reduce_scatter_all_gather"],
+                "dp": [1, 2]}
+    # predictive (plan/dryrun) cells only see plan-affecting fields — the
+    # planner prices (arch, shape, topology), not execution knobs like
+    # batch/compress/dp; sweep those with --kind train instead
+    archs = [args.arch] + [a for a in ("mamba2-780m",) if a != args.arch]
+    return {"topology": ["flat8", "2x4", "4x4-ib", "pod"], "arch": archs}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--kind", default="plan",
+                    help="Session method per cell: plan|dryrun|train|bench")
+    ap.add_argument("--steps", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 1 arch x 2 sync x 2 dp training cells "
+                         "on 2 simulated devices")
+    ap.add_argument("--out", default="results/sweep_campaign.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.kind, args.steps, args.batch, args.seq = "train", 2, 4, 32
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+    # without the cpu pin, jax probes the TPU backend (libtpu is installed)
+    # and stalls ~8 min in GCP-metadata retries on non-TPU hosts
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.api import JobSpec, Session
+
+    base = JobSpec(arch=args.arch, reduced=True, steps=args.steps,
+                   batch=args.batch, seq=args.seq, log_every=0)
+    camp = Session.sweep(base, _grids(args), kind=args.kind, progress=True)
+    summary = camp.summary()
+    print(f"\n{summary['n_ok']}/{summary['n_cells']} cells ok; "
+          f"Pareto front ({len(summary['pareto'])} cells):")
+    for cell in summary["pareto"]:
+        knobs = {k: v for k, v in cell.items()
+                 if k not in ("tokens_per_s", "efficiency", "source")}
+        print(f"  {knobs}  ->  {cell['tokens_per_s']:,.0f} tok/s "
+              f"@ eff {cell['efficiency']:.3f}")
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(camp.to_json())
+    print(f"wrote {out}")
+    return camp
+
+
+def run(csv_rows):
+    """Harness entry: predictive topology sweep, no training."""
+    print("\n== campaign sweep: topology x batch x compress (plan mode) ==")
+    camp = main(["--kind", "plan", "--out", "results/sweep_campaign.json"])
+    for cell, m in zip(camp.cells, camp.metrics()):
+        key = "sweep/" + "/".join(f"{k}={cell[k]}" for k in sorted(cell))
+        csv_rows.append((f"{key}/tokens_per_s", m["tokens_per_s"],
+                         f"sched={m['schedule']} eff={m['efficiency']:.3f}"))
+
+
+if __name__ == "__main__":
+    main()

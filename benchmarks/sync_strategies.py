@@ -81,14 +81,21 @@ def _bench(args) -> dict:
     measured["devices"] = dp
     measured["runs"] = []
 
+    from repro.core.hardware import get_cluster
+
     for strat_name in STRATEGIES:
         for comp_name in COMPRESSORS:
             if comp_name != "none" and (args.quick or strat_name != "all_reduce"
                                         and not args.full_grid):
                 continue  # compression is strategy-independent; sample once
+            # the hierarchical strategy gets a real 2-node topology when the
+            # device count allows one (else it degenerates to RS+AG)
+            topo = (get_cluster("2x4")
+                    if strat_name == "hier_all_reduce" and dp == 8 else None)
             tr = DataParallelTrainer(cfg, run, opt, strategy=strat_name,
                                      compression=comp_name,
-                                     devices=jax.devices()[:dp])
+                                     devices=jax.devices()[:dp],
+                                     topology=topo)
             res = tr.train(batch=args.batch, seq=args.seq, steps=args.steps,
                            seed=0, log_every=0)
             rep = tr.report()

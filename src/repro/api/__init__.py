@@ -13,12 +13,21 @@ parameter servers, run) as a single declarative API:
 Every entry point — ``repro.launch.train``/``serve``, ``benchmarks/*``,
 ``examples/*`` — goes through this facade, and every artifact is a
 :class:`Report` validated by :func:`validate_report`.
+
+Campaigns sweep the whole guideline space in one call (one Report per grid
+cell plus a throughput-vs-efficiency Pareto summary):
+
+    camp = Session.sweep(spec, {"topology": ["flat8", "2x4"],
+                                "batch": [4, 8]}, kind="plan")
+    camp.summary()["pareto"]
 """
+from repro.api.campaign import CAMPAIGN_SCHEMA_ID, Campaign, pareto_front
 from repro.api.report import KINDS, Report, SCHEMA_ID, validate_report
 from repro.api.session import Session
-from repro.api.spec import COMPRESSIONS, JobSpec, MESHES, SYNCS
+from repro.api.spec import COMPRESSIONS, JobSpec, MESHES, SYNCS, TOPOLOGIES
 
 __all__ = [
-    "JobSpec", "Session", "Report", "validate_report",
-    "SCHEMA_ID", "KINDS", "MESHES", "SYNCS", "COMPRESSIONS",
+    "JobSpec", "Session", "Report", "Campaign", "validate_report",
+    "pareto_front", "SCHEMA_ID", "CAMPAIGN_SCHEMA_ID", "KINDS", "MESHES",
+    "SYNCS", "COMPRESSIONS", "TOPOLOGIES",
 ]

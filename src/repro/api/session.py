@@ -12,17 +12,20 @@ shape/mesh — the paper's procedure sizes the real job; with
 """
 from __future__ import annotations
 
+import itertools
 import math
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.api.campaign import Campaign
 from repro.api.report import Report
 from repro.api.spec import JobSpec
 from repro.configs.base import ModelConfig, get_config, get_shape
 from repro.core import amdahl, memory_model as mm, ps as ps_lib
-from repro.core.hardware import MULTI_POD, SINGLE_POD
+from repro.core.hardware import (ClusterSpec, MeshSpec, MULTI_POD, SINGLE_POD,
+                                 get_cluster)
 from repro.core.planner import Plan, estimate_step_time, plan as plan_fn
 
 # Lemma 3.1 efficiency/speedup are reported for these device counts (the
@@ -39,7 +42,14 @@ class Session:
         self.cfg = config if config is not None else (
             self.cfg_full.reduced() if spec.reduced else self.cfg_full)
         self.shape = get_shape(spec.shape)
-        self.mesh_spec = SINGLE_POD if spec.mesh == "single" else MULTI_POD
+        if spec.topology:
+            # a named cluster pins the mesh geometry to its chip count
+            # (dp = chips, tp = 1: sweeps compare gradient-sync topologies)
+            self.cluster: Optional[ClusterSpec] = get_cluster(spec.topology)
+            self.mesh_spec = MeshSpec.from_cluster(self.cluster)
+        else:
+            self.mesh_spec = SINGLE_POD if spec.mesh == "single" else MULTI_POD
+            self.cluster = self.mesh_spec.topology
         self._config_override = config is not None
         self._plan: Optional[Plan] = None
 
@@ -134,7 +144,8 @@ class Session:
                     f"dp={spec.dp} but only {len(devs)} devices visible; set "
                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
                     f"{spec.dp}")
-            kw = dict(compression=spec.compress, devices=devs[:spec.dp])
+            kw = dict(compression=spec.compress, devices=devs[:spec.dp],
+                      topology=self.cluster)
             if spec.sync == "auto":
                 trainer = DataParallelTrainer.from_plan(
                     self.resolved_plan, self.cfg, run, opt, **kw)
@@ -196,6 +207,59 @@ class Session:
         return self._report("serve", measured, self._predicted())
 
     # ------------------------------------------------------------------
+    # Campaigns: the paper's guidelines as one queryable sweep
+    # ------------------------------------------------------------------
+    SWEEP_KINDS = ("plan", "dryrun", "train", "bench", "serve")
+
+    @classmethod
+    def sweep(cls, base: JobSpec, grid: Dict[str, Sequence[Any]], *,
+              kind: str = "plan", progress: bool = False) -> Campaign:
+        """Fan the cartesian product of ``grid`` out over ``base`` and run
+        one Session method per cell.
+
+        ``grid`` maps JobSpec field names to the values to sweep (arch x
+        dp x sync x compress x batch x topology x ...); each cell is
+        ``base.replace(**overrides)``.  ``kind`` picks what runs per cell:
+        ``plan``/``dryrun`` stay predictive (fast), ``train``/``bench``/
+        ``serve`` execute.  Cells whose spec is invalid (e.g. batch not
+        divisible by dp) or whose run fails land in ``Campaign.skipped``
+        with the error, so one bad cell cannot sink the campaign.
+
+        Note: predictive kinds only differentiate plan-affecting fields
+        (``arch``/``shape``/``mesh``/``topology``) — the planner prices the
+        production job, so sweeping execution knobs (batch/compress/dp/
+        sync) under ``kind="plan"`` yields cells with identical metrics;
+        run those grids with ``kind="train"`` to measure them.
+        """
+        if kind not in cls.SWEEP_KINDS:
+            raise ValueError(f"sweep kind must be one of {cls.SWEEP_KINDS}, "
+                             f"got {kind!r}")
+        if not grid:
+            raise ValueError("sweep needs a non-empty grid")
+        keys = sorted(grid)
+        values = [list(grid[k]) for k in keys]
+        reports: List[Report] = []
+        cells: List[Dict[str, Any]] = []
+        skipped: List[Dict[str, Any]] = []
+        for combo in itertools.product(*values):
+            overrides = dict(zip(keys, combo))
+            try:
+                spec = base.replace(**overrides)
+                rep = getattr(cls(spec), kind)()
+            except Exception as e:  # record, keep sweeping
+                skipped.append({"cell": overrides, "error": f"{type(e).__name__}: {e}"})
+                if progress:
+                    print(f"sweep[{kind}] {overrides} SKIPPED: {e}")
+                continue
+            reports.append(rep)
+            cells.append(overrides)
+            if progress:
+                print(f"sweep[{kind}] {overrides} ok")
+        return Campaign(kind=kind, grid={k: list(grid[k]) for k in keys},
+                        cells=cells, reports=reports,
+                        skipped=skipped).validate()
+
+    # ------------------------------------------------------------------
     # Shared prediction / report assembly
     # ------------------------------------------------------------------
     def _predicted(self, *, measured_r_o: Optional[float] = None) -> Dict:
@@ -225,16 +289,19 @@ class Session:
                          "speedup": amdahl.speedup(g, r_o)}
                 for g in LEMMA31_G},
         }
-        # Lemma 3.2: comm-time prediction for the planned schedule
+        # Lemma 3.2: comm-time prediction for the planned schedule, priced
+        # on the plan's topology tiers
         if p.sync_schedule in ("-", "") or not p.grad_bytes or p.link_bw <= 0:
             out["lemma32"] = {"schedule": p.sync_schedule or "-"}
         else:
             dp = p.mesh[0]
             t_c = (p.est_step_time if math.isfinite(p.est_step_time) else 1.0)
+            tiers = p.dp_tiers()
             n_ps = ps_lib.n_parameter_servers(p.grad_bytes, dp, p.link_bw,
                                               max(t_c, 1e-9))
             comm = ps_lib.predicted_comm_time(
-                p.sync_schedule, p.grad_bytes, dp, p.link_bw, n_ps=n_ps)
+                p.sync_schedule, p.grad_bytes, dp, p.link_bw, n_ps=n_ps,
+                tiers=tiers)
             out["lemma32"] = {
                 "schedule": p.sync_schedule,
                 "dp": dp,
@@ -244,7 +311,13 @@ class Session:
                 "predicted_comm_s": comm,
                 "t_c_s": t_c,
                 "masked": comm <= t_c,
+                "bottleneck_tier": p.bottleneck_tier,
             }
+            cluster = p.cluster
+            if cluster is not None and not cluster.uniform:
+                # tier-aware PS placement: B_ps in-node vs cross-node
+                out["lemma32"]["ps_placement"] = ps_lib.ps_placement_plan(
+                    p.grad_bytes, dp, cluster, max(t_c, 1e-9))
         return out
 
     def report_meta(self) -> Dict[str, Any]:
@@ -253,7 +326,7 @@ class Session:
         artifact records the config that actually executed (which, with a
         ``config=`` override or ``reduced=True``, differs from the arch the
         spec/plan name)."""
-        return {
+        meta: Dict[str, Any] = {
             "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "executed_config": {
                 "name": self.cfg.name,
@@ -264,6 +337,16 @@ class Session:
             },
             "config_override": self._config_override,
         }
+        if (self.spec.topology and self.spec.dp
+                and self.cluster is not None
+                and self.spec.dp != self.cluster.n_chips):
+            meta["topology_note"] = (
+                f"spec.dp={self.spec.dp} != topology "
+                f"{self.spec.topology!r} chips={self.cluster.n_chips}: "
+                "predicted blocks are priced on the full topology; the "
+                "measured run executes on spec.dp devices, where the sync "
+                "strategy may degenerate (see measured.sync.tiers)")
+        return meta
 
     def _report(self, kind: str, measured: Dict, predicted: Dict) -> Report:
         return Report(kind=kind, spec=self.spec.to_dict(),

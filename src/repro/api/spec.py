@@ -17,9 +17,12 @@ from typing import Any, Dict
 
 from repro.configs.base import ARCH_IDS, SHAPES
 from repro.core import ps as ps_lib
+from repro.core.hardware import CLUSTERS
 
 MESHES = ("single", "multi")
 SYNCS = ("auto",) + ps_lib.SCHEDULES
+# named cluster topologies ("" = the mesh's flat single-tier equivalent)
+TOPOLOGIES = ("",) + tuple(sorted(CLUSTERS))
 # names mirror repro.distributed.compression.COMPRESSORS (kept import-light
 # here: the registry pulls in jax, and a spec must be constructible without
 # touching a backend)
@@ -34,6 +37,8 @@ class JobSpec:
     reduced: bool = True          # reduced family member vs FULL config
     shape: str = "train_4k"       # planner ShapeConfig name
     mesh: str = "single"          # planner mesh: single | multi pod
+    topology: str = ""            # named ClusterSpec (hardware.CLUSTERS);
+                                  # "" = flat cluster equivalent to `mesh`
     steps: int = 100
     batch: int = 8
     seq: int = 128
@@ -60,6 +65,9 @@ class JobSpec:
                              f"known: {sorted(SHAPES)}")
         if self.mesh not in MESHES:
             raise ValueError(f"mesh must be one of {MESHES}, got {self.mesh!r}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}; "
+                             f"known: {TOPOLOGIES}")
         if self.sync not in SYNCS:
             raise ValueError(f"sync must be one of {SYNCS}, got {self.sync!r}")
         if self.compress not in COMPRESSIONS:

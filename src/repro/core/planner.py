@@ -21,7 +21,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import amdahl, ilp, memory_model as mm, ps
-from repro.core.hardware import MeshSpec, SINGLE_POD
+from repro.core.hardware import ClusterSpec, MeshSpec, SINGLE_POD, Tier
 from repro.models import model as M
 
 
@@ -42,7 +42,10 @@ class Plan:
     fits: bool
     efficiency: float
     grad_bytes: float = 0.0  # S_p: fp32 grad payload per TP shard
-    link_bw: float = 0.0  # bytes/s of the mesh's chip interconnect
+    # serialized ClusterSpec (tiers with bandwidths) the plan was priced on;
+    # replaces the old scalar `link_bw` field
+    topology: Optional[Dict] = None
+    bottleneck_tier: str = ""  # slowest spanning tier for the sync schedule
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
@@ -54,6 +57,30 @@ class Plan:
         the RunConfig knobs plus optimizer kind and the sync schedule."""
         return dict(self.run_config_kwargs(), opt_kind=self.opt_kind,
                     sync=self.sync_schedule)
+
+    # -- topology view -----------------------------------------------------
+    @property
+    def cluster(self) -> Optional[ClusterSpec]:
+        return ClusterSpec.from_dict(self.topology) if self.topology else None
+
+    @property
+    def link_bw(self) -> float:
+        """Bandwidth of the topology's narrowest spanning tier — what the
+        flat (topology-blind) schedules are priced at.  Kept as a property
+        for consumers of the pre-topology scalar field."""
+        c = self.cluster
+        return c.min_bw if c is not None else 0.0
+
+    def dp_tiers(self) -> Tuple[Tier, ...]:
+        """The data axis's per-tier fan-out (TP packed innermost)."""
+        c = self.cluster
+        dp = self.mesh[0]
+        if c is None:
+            return (Tier("flat", dp, 1.0),)
+        try:
+            return c.dp_view(dp, self.mesh[1])
+        except ValueError:  # mesh geometry disagrees with the topology
+            return (Tier(c.bottleneck_tier, dp, c.min_bw),)
 
     # -- round-trip serialization (benchmark artifacts carry the plan) -----
     def to_dict(self) -> Dict:
@@ -68,6 +95,12 @@ class Plan:
         kw = {k: v for k, v in d.items() if k in known}
         kw["mesh"] = tuple(kw["mesh"])
         kw["notes"] = list(kw.get("notes", []))
+        # pre-topology plans carried a scalar link_bw: rebuild the
+        # equivalent flat single-tier cluster so pricing still works
+        if not kw.get("topology") and d.get("link_bw"):
+            dp, tp = kw["mesh"]
+            kw["topology"] = ClusterSpec.flat(
+                dp * tp, float(d["link_bw"])).to_dict()
         return cls(**kw)
 
     @classmethod
@@ -79,12 +112,16 @@ class Plan:
         (:class:`repro.distributed.collectives.SyncStrategy`) instead of a
         string. For the parameter-server schedule the shard count comes from
         Lemma 3.2 (``ps.n_parameter_servers``) sized for this plan's mesh,
-        payload, and estimated step time."""
+        payload, and estimated step time; for ``hier_all_reduce`` the tier
+        fan-out comes from the plan's topology."""
         from repro.distributed.collectives import get_strategy
 
         if self.sync_schedule in ("-", ""):
             raise ValueError(f"plan for {self.arch}/{self.shape} has no "
                              "gradient sync (decode plan?)")
+        if self.sync_schedule == "hier_all_reduce":
+            sizes = tuple(t.size for t in self.dp_tiers())
+            return get_strategy("hier_all_reduce", tiers=sizes)
         n_servers = None
         if self.sync_schedule == "parameter_server" and self.grad_bytes:
             dp = self.mesh[0]
@@ -125,6 +162,30 @@ def train_flops_per_step(cfg: ModelConfig, shape: ShapeConfig, remat: str) -> fl
     return base + attn
 
 
+def _dp_tiers(mesh: MeshSpec) -> Tuple[Tier, ...]:
+    """Data-axis tier view of the mesh's cluster, with a flat fallback when
+    the logical dp x tp geometry does not factor along the topology."""
+    c = mesh.cluster
+    try:
+        return c.dp_view(mesh.dp, mesh.tp)
+    except ValueError:
+        return (Tier(c.bottleneck_tier, mesh.dp, c.min_bw),)
+
+
+def grad_sync_time(s_p: float, dp_tiers: Tuple[Tier, ...]) -> Tuple[float, str]:
+    """Cheapest gradient-sync comm time for a payload of ``s_p`` bytes per
+    worker over the tiered data axis, and the winning schedule — one call
+    into :func:`ps.grad_sync_plan` so the step-time model and the plan's
+    stored ``sync_schedule`` share one selection rule.  (With nonzero
+    per-tier latency the winner can still depend on the payload size; the
+    plan's stored schedule — selected on the sync payload — is the
+    authoritative one.)"""
+    if not any(t.size > 1 for t in dp_tiers):
+        return 0.0, "none"
+    plan = ps.grad_sync_plan(s_p, dp_tiers, t_c=1.0)
+    return plan.comm_time, plan.schedule
+
+
 def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                        remat: str, microbatch: int) -> Dict[str, float]:
     flops = train_flops_per_step(cfg, shape, remat) / mesh.chips
@@ -135,12 +196,19 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     param_traffic = 2 * n / mesh.tp * 3 * max(n_micro, 1)
     act_traffic = 12 * shape.global_batch * shape.seq_len * cfg.d_model * 2 / mesh.chips
     t_mem = (param_traffic + act_traffic) / mesh.chip.hbm_bw
-    # collective: grad sync (2*S_p) + TP activation collectives per layer
-    grad_wire = 2 * 4 * n / mesh.tp * (mesh.dp - 1) / mesh.dp
+    # collectives, priced per topology tier: the fp32 grad sync rides the
+    # data axis (flat ring at the bottleneck bw, or the hierarchical
+    # schedule when the tree is cheaper); TP activation collectives stay on
+    # the innermost (fastest) tier, where TP ranks are packed
+    cluster = mesh.cluster
+    tiers = _dp_tiers(mesh)
+    t_grad, _ = grad_sync_time(4 * n / mesh.tp, tiers)
     tp_wire = (4 * cfg.num_layers * shape.global_batch * shape.seq_len
                * cfg.d_model * 2 / mesh.chips)
-    t_coll = (grad_wire / mesh.chips * mesh.tp + tp_wire) / mesh.chip.link_bw
+    t_tp = tp_wire / cluster.tiers[0].bw
+    t_coll = t_grad + t_tp
     return {"compute": t_compute, "memory": t_mem, "collective": t_coll,
+            "collective_grad": t_grad, "collective_tp": t_tp,
             "total": max(t_compute, t_mem, t_coll)}
 
 
@@ -195,11 +263,14 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
                           seq_parallel=True, opt_kind=opt_kind)
     fits = mem.total <= hbm
 
-    # Lemma 3.2 (TPU mapping): can grad sync hide behind compute?
-    sync = ps.tpu_grad_sync_plan(
-        2 * mm.n_params(cfg) / mesh.tp, mesh.dp, mesh.chip.link_bw,
+    # Lemma 3.2 (tier-aware): can grad sync hide behind compute, and does
+    # the topology make the hierarchical schedule the better vehicle?
+    sync = ps.grad_sync_plan(
+        2 * mm.n_params(cfg) / mesh.tp, _dp_tiers(mesh),
         t_c=t_best if math.isfinite(t_best) else 1.0)
     notes.append(f"Lemma3.2: {sync.note}")
+    if sync.bottleneck_tier:
+        notes.append(f"bottleneck tier: {sync.bottleneck_tier}")
 
     # Lemma 3.1: overhead ratio from the non-compute roofline terms
     terms = estimate_step_time(cfg, shape, mesh, remat, mb)
@@ -212,7 +283,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         opt_kind=opt_kind, sync_schedule=sync.schedule,
         est_step_time=t_best, est_memory_gb=mem.total / 2**30, fits=fits,
         efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp,
-        link_bw=mesh.chip.link_bw, notes=notes,
+        topology=mesh.cluster.to_dict(),
+        bottleneck_tier=sync.bottleneck_tier, notes=notes,
     )
 
 
@@ -237,7 +309,7 @@ def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
         microbatch=0, attn_impl="dense", remat="none", seq_parallel=False,
         opt_kind="-", sync_schedule="-", est_step_time=t,
         est_memory_gb=mem.total / 2**30, fits=fits,
-        efficiency=1.0, notes=notes,
+        efficiency=1.0, topology=mesh.cluster.to_dict(), notes=notes,
     )
 
 

@@ -1,4 +1,4 @@
-"""Lemma 3.2 — parameter-server sizing, and its TPU mapping.
+"""Lemma 3.2 — parameter-server sizing, its TPU mapping, and tier-aware forms.
 
 Paper form:  N_ps >= 2 * S_p * N_w / (B_ps * T_C)
 (total pull+push traffic 2*S_p per worker per step, spread over N_ps servers
@@ -8,11 +8,24 @@ TPU mapping (DESIGN.md §2): the "PS cluster" is the data axis itself with
 ZeRO-sharded optimizer state. The same inequality decides whether gradient
 synchronization (reduce-scatter + all-gather == pull+push) hides behind
 compute, and therefore which collective schedule the planner picks.
+
+Tier-aware forms: on a hierarchical cluster (chip -> node -> cluster, see
+:mod:`repro.core.hardware`) the lemma's ``B_ps`` is a *choice* — a server
+colocated in-node talks over the fast intra-node links, a cross-node server
+over the slow tier — and the collective analogue is the FireCaffe-style
+reduction tree: reduce inside each node first, exchange only 1/node_size of
+the payload across the slow tier, broadcast back in-node
+(``hier_all_reduce``). :func:`hier_comm_time` prices that schedule per tier;
+:func:`grad_sync_plan` picks flat vs hierarchical for a given topology.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.hardware import ClusterSpec, Tier
 
 
 def n_parameter_servers(s_p: float, n_w: int, b_ps: float, t_c: float) -> int:
@@ -32,25 +45,122 @@ def masked(s_p: float, n_w: int, n_ps: int, b_ps: float, t_c: float) -> bool:
     return io_time(s_p, n_w, n_ps, b_ps) <= t_c
 
 
+# ---------------------------------------------------------------------------
+# Tier-aware Lemma 3.2: B_ps depends on where the servers sit
+# ---------------------------------------------------------------------------
+
+PS_PLACEMENTS = ("in_node", "cross_node")
+
+
+def ps_placement_bw(cluster: ClusterSpec, placement: str) -> float:
+    """The ``B_ps`` a parameter server sees on this cluster.
+
+    ``in_node``: the PS shard is colocated with its workers' node, so
+    push/pull rides the innermost (fastest) tier.  ``cross_node``: the PS
+    pool lives across the slow tier (the paper's dedicated-PS deployment),
+    so every byte crosses the narrowest spanning link.
+    """
+    if placement == "in_node":
+        return cluster.tiers[0].bw
+    if placement == "cross_node":
+        return cluster.min_bw
+    raise KeyError(f"unknown placement {placement!r}; known: {PS_PLACEMENTS}")
+
+
+def n_parameter_servers_tiered(s_p: float, n_w: int, cluster: ClusterSpec,
+                               t_c: float, *,
+                               placement: str = "cross_node") -> int:
+    """Lemma 3.2 with ``B_ps`` read off the topology tier the servers sit
+    on, instead of a flat scalar."""
+    return n_parameter_servers(s_p, n_w, ps_placement_bw(cluster, placement),
+                               t_c)
+
+
+def ps_placement_plan(s_p: float, n_w: int, cluster: ClusterSpec,
+                      t_c: float) -> Dict[str, Dict[str, float]]:
+    """Both Lemma 3.2 regimes side by side: the N_ps you need when servers
+    are in-node vs across the slow tier, and which placement is cheaper
+    (fewer servers for the same maskability)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for placement in PS_PLACEMENTS:
+        bw = ps_placement_bw(cluster, placement)
+        n_ps = n_parameter_servers(s_p, n_w, bw, t_c)
+        out[placement] = {
+            "b_ps": bw,
+            "n_ps": n_ps,
+            "io_time_s": io_time(s_p, n_w, n_ps, bw),
+        }
+    out["recommended"] = min(
+        PS_PLACEMENTS, key=lambda p: out[p]["n_ps"])  # type: ignore[assignment]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Runnable schedules and their comm-time forms
+# ---------------------------------------------------------------------------
+
 # Runnable schedules (executed by repro.distributed.collectives; the planner
 # stores one of these in Plan.sync_schedule and Plan.resolve_sync turns it
 # into the executable strategy).
-SCHEDULES = ("all_reduce", "reduce_scatter_all_gather", "parameter_server")
+SCHEDULES = ("all_reduce", "reduce_scatter_all_gather", "parameter_server",
+             "hier_all_reduce")
+
+
+def flat_wire_bytes(s_p: float, dp: int) -> float:
+    """Per-worker wire bytes of a ring all-reduce / RS+AG over dp workers."""
+    frac = (dp - 1) / dp if dp > 1 else 0.0
+    return 2.0 * s_p * frac
+
+
+def hier_wire_bytes(s_p: float, tier_sizes: Sequence[int]) -> Tuple[float, ...]:
+    """Per-worker wire bytes at each tier of the hierarchical schedule.
+
+    Tier 0 (in-node) reduce-scatters and later all-gathers the full payload:
+    2*S_p*(d0-1)/d0.  Tier k exchanges only the 1/prod(d_<k) shard that
+    survived the inner reductions: 2*(S_p/prod)*(d_k-1)/d_k — the
+    FireCaffe reduction-tree saving.
+    """
+    out, shard = [], s_p
+    for d in tier_sizes:
+        out.append(flat_wire_bytes(shard, d))
+        shard /= max(d, 1)
+    return tuple(out)
+
+
+def hier_comm_time(s_p: float, tiers: Sequence[Tier]) -> Tuple[float, Tuple[Dict, ...]]:
+    """Total comm time and the per-tier breakdown of ``hier_all_reduce``.
+
+    Phases are sequential (reduce in, exchange across, broadcast out), so
+    the total is the *sum* of per-tier times — but each tier only carries
+    its shard, which is what beats a flat ring priced at the min bandwidth.
+    """
+    wires = hier_wire_bytes(s_p, [t.size for t in tiers])
+    per_tier = tuple(
+        {"tier": t.name, "size": t.size, "bw": t.bw,
+         "wire_bytes": w, "time_s": w / t.bw + (t.latency if t.size > 1 else 0.0)}
+        for t, w in zip(tiers, wires))
+    return sum(p["time_s"] for p in per_tier), per_tier
 
 
 def predicted_comm_time(schedule: str, s_p: float, dp: int, link_bw: float,
-                        *, n_ps: int = 0) -> float:
+                        *, n_ps: int = 0,
+                        tiers: Optional[Sequence[Tier]] = None) -> float:
     """Lemma 3.2's comm-time prediction for a runnable schedule.
 
-    Ring all-reduce and RS+AG move 2*S_p*(dp-1)/dp per worker; the sharded
-    parameter-server emulation is Eq. 7's server-side bottleneck
-    2*S_p*N_w/(N_ps*B_ps) with N_w = dp workers.
+    Ring all-reduce and RS+AG move 2*S_p*(dp-1)/dp per worker over the
+    narrowest link; the sharded parameter-server emulation is Eq. 7's
+    server-side bottleneck 2*S_p*N_w/(N_ps*B_ps) with N_w = dp workers;
+    ``hier_all_reduce`` sums the per-tier phases (pass ``tiers``; without a
+    topology it degenerates to the flat form at ``link_bw``).
     """
     if schedule == "parameter_server":
         return io_time(s_p, dp, n_ps or dp, link_bw)
     if schedule in ("all_reduce", "reduce_scatter_all_gather"):
-        frac = (dp - 1) / dp if dp > 1 else 0.0
-        return 2.0 * s_p * frac / link_bw
+        return flat_wire_bytes(s_p, dp) / link_bw
+    if schedule == "hier_all_reduce":
+        if not tiers:
+            tiers = (Tier("flat", dp, link_bw),)
+        return hier_comm_time(s_p, tiers)[0]
     raise KeyError(f"unknown schedule {schedule!r}; known: {SCHEDULES}")
 
 
@@ -61,6 +171,8 @@ class SyncPlan:
     compute_time: float
     masked: bool
     note: str
+    bottleneck_tier: str = ""
+    per_tier: Tuple[Dict, ...] = field(default_factory=tuple)
 
 
 def tpu_grad_sync_plan(param_bytes: float, dp: int, link_bw: float,
@@ -72,8 +184,7 @@ def tpu_grad_sync_plan(param_bytes: float, dp: int, link_bw: float,
     (the ZeRO '"N_ps = dp parameter servers'" mapping) and lets the
     all-gather overlap the next step's first layers.
     """
-    frac = (dp - 1) / dp if dp > 1 else 0.0
-    wire = 2.0 * param_bytes * frac
+    wire = flat_wire_bytes(param_bytes, dp)
     comm = wire / link_bw
     schedule = "reduce_scatter_all_gather" if zero_sharded else "all_reduce"
     return SyncPlan(
@@ -85,3 +196,58 @@ def tpu_grad_sync_plan(param_bytes: float, dp: int, link_bw: float,
               + ("hidden behind compute" if comm <= t_c else
                  "NOT maskable - increase T_C (bigger microbatch) or shrink S_p")),
     )
+
+
+def grad_sync_plan(param_bytes: float, dp_tiers: Sequence[Tier], t_c: float,
+                   *, zero_sharded: bool = True) -> SyncPlan:
+    """Tier-aware Lemma 3.2: pick the cheapest schedule for this topology.
+
+    On a uniform (single spanning tier) view this reduces exactly to
+    :func:`tpu_grad_sync_plan`.  On a hierarchy it prices the flat ring at
+    the bottleneck bandwidth against the hierarchical reduce/exchange/
+    broadcast and returns whichever masks better, with the per-tier
+    breakdown and the bottleneck tier named either way.
+    """
+    spanning = [t for t in dp_tiers if t.size > 1]
+    dp = math.prod(t.size for t in dp_tiers) if dp_tiers else 1
+    if len(spanning) <= 1:
+        bw = spanning[0].bw if spanning else dp_tiers[0].bw
+        flat = tpu_grad_sync_plan(param_bytes, dp, bw, t_c,
+                                  zero_sharded=zero_sharded)
+        lat = spanning[0].latency if spanning else 0.0
+        if lat:
+            comm = flat.comm_time + lat
+            flat = dataclasses.replace(flat, comm_time=comm,
+                                       masked=comm <= t_c)
+        name = spanning[0].name if spanning else dp_tiers[0].name
+        return dataclasses.replace(flat, bottleneck_tier=name)
+
+    min_bw = min(t.bw for t in spanning)
+    # the flat ring spans every tier, so it pays each spanning tier's
+    # latency too — without this the comparison would be biased flat-ward
+    flat_time = (flat_wire_bytes(param_bytes, dp) / min_bw
+                 + sum(t.latency for t in spanning))
+    hier_time, per_tier = hier_comm_time(param_bytes, dp_tiers)
+    if hier_time < flat_time:
+        bottleneck = max((p for p in per_tier if p["size"] > 1),
+                         key=lambda p: p["time_s"])["tier"]
+        return SyncPlan(
+            schedule="hier_all_reduce",
+            comm_time=hier_time,
+            compute_time=t_c,
+            masked=hier_time <= t_c,
+            note=(f"hierarchical {'x'.join(str(t.size) for t in dp_tiers)}: "
+                  f"{hier_time:.3f}s vs flat {flat_time:.3f}s at bottleneck "
+                  f"tier '{bottleneck}'; "
+                  + ("hidden behind compute" if hier_time <= t_c
+                     else "NOT maskable")),
+            bottleneck_tier=bottleneck,
+            per_tier=per_tier,
+        )
+    flat = tpu_grad_sync_plan(param_bytes, dp, min_bw, t_c,
+                              zero_sharded=zero_sharded)
+    if flat_time != flat.comm_time:  # carry the latency hops priced above
+        flat = dataclasses.replace(flat, comm_time=flat_time,
+                                   masked=flat_time <= t_c)
+    bottleneck = min(spanning, key=lambda t: t.bw).name
+    return dataclasses.replace(flat, bottleneck_tier=bottleneck)

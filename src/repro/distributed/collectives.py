@@ -1,11 +1,11 @@
 """Gradient-sync strategies over the mesh data axis (Lemma 3.2, executable).
 
 Every strategy is a pure function on a gradient pytree that runs *inside*
-``shard_map`` over the ``data`` axis: it receives this device's local
-gradients and must return the data-axis **mean**, replicated on every
-device. The three members of the zoo differ only in which collectives move
-the bytes — which is exactly the degree of freedom the paper's Lemma 3.2
-prices:
+``shard_map`` over the data axis (or, for the hierarchical strategy, over
+nested ``(nodes, data)`` axes): it receives this device's local gradients
+and must return the data-axis **mean**, replicated on every device. The
+members of the zoo differ only in which collectives move the bytes — which
+is exactly the degree of freedom the paper's Lemma 3.2 prices:
 
 - ``all_reduce``      — one fused all-reduce; wire 2*S_p*(dp-1)/dp per chip.
 - ``reduce_scatter_all_gather`` — explicit reduce-scatter of the flat
@@ -16,16 +16,26 @@ prices:
   is split into ``n_servers`` buckets (the count Lemma 3.2 sizes) and each
   bucket is synchronized by its own collective, emulating one server's
   push+reduce+pull round. Worker-side wire is the lemma's 2*S_p.
+- ``hier_all_reduce`` — the FireCaffe-style reduction tree over the cluster
+  topology: reduce-scatter *inside* each node (fast tier), all-reduce only
+  the surviving 1/node shard *across* nodes (slow tier), all-gather back
+  in-node. Executed via nested shard_map axes ``(nodes, data)``; per-tier
+  wire bytes come from :func:`repro.core.ps.hier_wire_bytes`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ps as ps_lib
+from repro.core.hardware import Tier
+
+# a strategy's axis argument: one shard_map axis name, or (outer..., inner)
+# nested axis names for the hierarchical strategies
+AxisArg = Union[str, Tuple[str, ...]]
 
 
 # ---------------------------------------------------------------------------
@@ -66,32 +76,70 @@ class SyncStrategy:
     """A named gradient-sync schedule, executable inside shard_map."""
 
     name: str
-    # (local_grads, axis_name, dp) -> mean grads, replicated over the axis
-    _sync: Callable[[Any, str, int], Any]
+    # (local_grads, axis-or-axes, dp) -> mean grads, replicated over the axis
+    _sync: Callable[[Any, AxisArg, int], Any]
     n_servers: Optional[int] = None  # parameter_server only
+    tiers: Optional[Tuple[int, ...]] = None  # hier only: sizes, innermost first
 
-    def sync(self, grads, axis: str, dp: int):
+    @property
+    def hierarchical(self) -> bool:
+        return self.name == "hier_all_reduce"
+
+    def sync(self, grads, axis: AxisArg, dp: int):
         return self._sync(grads, axis, dp)
+
+    def _tier_sizes(self, dp: int) -> Tuple[int, ...]:
+        return self.tiers if self.tiers else (dp,)
 
     def wire_bytes(self, s_p: float, dp: int) -> float:
         """Per-worker wire bytes for one sync of s_p gradient bytes."""
+        if dp <= 1:
+            return 0.0  # nothing crosses the wire without a second worker
         if self.name == "parameter_server":
             return 2.0 * s_p  # push everything out + pull everything back
-        frac = (dp - 1) / dp if dp > 1 else 0.0
-        return 2.0 * s_p * frac  # ring all-reduce == RS + AG
+        if self.hierarchical:
+            return sum(ps_lib.hier_wire_bytes(s_p, self._tier_sizes(dp)))
+        return ps_lib.flat_wire_bytes(s_p, dp)  # ring all-reduce == RS + AG
 
-    def predicted_comm_time(self, s_p: float, dp: int, link_bw: float) -> float:
-        """Lemma 3.2's comm-time prediction for this schedule."""
+    def wire_bytes_by_tier(self, s_p: float, dp: int) -> Tuple[float, ...]:
+        """Per-worker wire bytes attributed to each topology tier
+        (innermost first).  Flat strategies push their full payload across
+        every spanning tier (a ring is blind to the hierarchy); the
+        hierarchical schedule only moves the surviving shard outward."""
+        if dp <= 1:
+            return tuple(0.0 for _ in self._tier_sizes(dp))
+        sizes = self._tier_sizes(dp)
+        if self.hierarchical:
+            return ps_lib.hier_wire_bytes(s_p, sizes)
+        total = self.wire_bytes(s_p, dp)
+        return tuple(total if d > 1 else 0.0 for d in sizes)
+
+    def predicted_comm_time(self, s_p: float, dp: int, link_bw: float,
+                            *, tier_bws: Optional[Sequence[float]] = None
+                            ) -> float:
+        """Lemma 3.2's comm-time prediction for this schedule.  For the
+        hierarchical strategy pass ``tier_bws`` (aligned with ``tiers``) to
+        price each phase on its own link; a scalar ``link_bw`` prices a
+        degenerate uniform hierarchy."""
+        if dp <= 1:
+            return 0.0
+        tiers = None
+        if self.hierarchical:
+            sizes = self._tier_sizes(dp)
+            bws = tuple(tier_bws) if tier_bws else (link_bw,) * len(sizes)
+            tiers = tuple(Tier(f"t{i}", d, bw)
+                          for i, (d, bw) in enumerate(zip(sizes, bws)))
         return ps_lib.predicted_comm_time(self.name, s_p, dp, link_bw,
-                                          n_ps=self.n_servers or 0)
+                                          n_ps=self.n_servers or 0,
+                                          tiers=tiers)
 
 
-def _all_reduce(grads, axis: str, dp: int):
+def _all_reduce(grads, axis: AxisArg, dp: int):
     return jax.tree_util.tree_map(
         lambda g: jax.lax.pmean(g.astype(jnp.float32), axis), grads)
 
 
-def _reduce_scatter_all_gather(grads, axis: str, dp: int):
+def _reduce_scatter_all_gather(grads, axis: AxisArg, dp: int):
     """ZeRO mapping: RS the flat gradient (each device owns 1/dp of the sum),
     scale locally, AG the shards back. Bitwise the same mean as all_reduce
     up to reduction order."""
@@ -107,8 +155,33 @@ def _reduce_scatter_all_gather(grads, axis: str, dp: int):
     return unflatten_tree(full, meta)
 
 
+def _hier_all_reduce(grads, axis: AxisArg, dp: int):
+    """Reduction tree over nested axes ``(outer, inner)``: reduce-scatter
+    in-node, all-reduce the 1/d_inner shard across nodes, all-gather back
+    in-node.  On a single (string) axis it degenerates to RS+AG."""
+    if isinstance(axis, str) or len(axis) == 1:
+        return _reduce_scatter_all_gather(
+            grads, axis if isinstance(axis, str) else axis[0], dp)
+    outer, inner = axis[:-1], axis[-1]
+    outer = outer[0] if len(outer) == 1 else outer
+    flat, meta = flatten_tree(grads)
+    d_inner = jax.lax.psum(1, inner)  # static inner-axis size
+    pad = (-flat.size) % d_inner
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    # phase 1 (fast tier): in-node reduce, each chip keeps a 1/d_inner shard
+    shard = jax.lax.psum_scatter(flat, inner, scatter_dimension=0, tiled=True)
+    # phase 2 (slow tier): only the shard crosses nodes
+    shard = jax.lax.psum(shard, outer) / dp
+    # phase 3 (fast tier): in-node broadcast of the synced shards
+    full = jax.lax.all_gather(shard, inner, axis=0, tiled=True)
+    if pad:
+        full = full[:-pad]
+    return unflatten_tree(full, meta)
+
+
 def _parameter_server(n_servers: int):
-    def sync(grads, axis: str, dp: int):
+    def sync(grads, axis: AxisArg, dp: int):
         flat, meta = flatten_tree(grads)
         n = max(min(n_servers, flat.size), 1)
         # static near-equal bucket sizes (np.array_split semantics)
@@ -128,29 +201,46 @@ def _parameter_server(n_servers: int):
     return sync
 
 
-def get_strategy(name: str, *, n_servers: Optional[int] = None) -> SyncStrategy:
+def get_strategy(name: str, *, n_servers: Optional[int] = None,
+                 tiers: Optional[Sequence[int]] = None) -> SyncStrategy:
     """Resolve a schedule name (as stored in ``Plan.sync_schedule``) to an
-    executable strategy. ``n_servers`` defaults to dp at sync time for the
-    parameter-server emulation; size it with Lemma 3.2
-    (:func:`repro.core.ps.n_parameter_servers`) for a faithful run."""
+    executable strategy.
+
+    ``n_servers`` (parameter_server): ``None`` defers to the dynamic
+    ``N_ps = dp`` default at sync time; an explicit non-positive count is an
+    error — size it with Lemma 3.2 (:func:`repro.core.ps.n_parameter_servers`)
+    for a faithful run.  ``tiers`` (hier_all_reduce): per-tier fan-out,
+    innermost first, e.g. ``(4, 2)`` for 2 nodes x 4 chips; without it the
+    strategy treats the whole axis as one node.
+    """
     if name == "all_reduce":
         return SyncStrategy("all_reduce", _all_reduce)
     if name == "reduce_scatter_all_gather":
         return SyncStrategy("reduce_scatter_all_gather",
                             _reduce_scatter_all_gather)
+    if name == "hier_all_reduce":
+        t = tuple(int(d) for d in tiers) if tiers else None
+        if t and any(d < 1 for d in t):
+            raise ValueError(f"hier_all_reduce tiers must be >= 1, got {t}")
+        return SyncStrategy("hier_all_reduce", _hier_all_reduce, tiers=t)
     if name == "parameter_server":
-        n = n_servers or 0
-        return SyncStrategy(
-            "parameter_server",
-            _parameter_server(n) if n else _ps_dynamic, n_servers=n or None)
+        if n_servers is None:
+            return SyncStrategy("parameter_server", _ps_dynamic)
+        if n_servers < 1:
+            raise ValueError(
+                f"parameter_server needs n_servers >= 1, got {n_servers}; "
+                "pass None to defer to the dynamic N_ps = dp default")
+        return SyncStrategy("parameter_server", _parameter_server(n_servers),
+                            n_servers=n_servers)
     raise KeyError(f"unknown sync strategy {name!r}; known: {STRATEGIES}")
 
 
-def _ps_dynamic(grads, axis: str, dp: int):
+def _ps_dynamic(grads, axis: AxisArg, dp: int):
     # n_servers unspecified: default to dp (ZeRO's N_ps = dp choice)
     return _parameter_server(dp)(grads, axis, dp)
 
 
 STRATEGIES: Tuple[str, ...] = (
     "all_reduce", "reduce_scatter_all_gather", "parameter_server",
+    "hier_all_reduce",
 )

@@ -21,9 +21,11 @@ every strategy must match the single-device baseline within fp32 tolerance
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Union
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +34,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import ModelConfig
+from repro.core.hardware import ClusterSpec
 from repro.core.pipeline import StepTimes
 from repro.distributed.collectives import SyncStrategy, get_strategy
 from repro.distributed.compression import Compressor, get_compressor
@@ -65,6 +68,10 @@ class SyncReport:
     masked_measured: bool       # comm <= T_C on the wall clock
     masked_predicted: bool      # comm <= T_C per the lemma
     r_o_measured: float         # Lemma 3.1 overhead ratio from StepTimes
+    # topology view (hierarchical runs): dp-axis fan-out per tier,
+    # innermost first, and the per-tier wire-byte split of `wire_bytes`
+    tiers: Optional[Tuple[int, ...]] = None
+    wire_bytes_by_tier: Optional[Tuple[float, ...]] = None
 
     def as_dict(self) -> Dict[str, Any]:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -93,7 +100,8 @@ class DataParallelTrainer:
                  strategy: Union[str, SyncStrategy] = "all_reduce",
                  compression: Union[str, Compressor] = "none",
                  devices: Optional[List] = None,
-                 link_bw: float = DEFAULT_LINK_BW):
+                 link_bw: float = DEFAULT_LINK_BW,
+                 topology: Optional[ClusterSpec] = None):
         self.cfg, self.run, self.opt = cfg, run, opt
         self.strategy = (get_strategy(strategy)
                          if isinstance(strategy, str) else strategy)
@@ -101,11 +109,49 @@ class DataParallelTrainer:
                            if isinstance(compression, str) else compression)
         devs = list(devices if devices is not None else jax.devices())
         self.dp = len(devs)
-        self.mesh = Mesh(np.array(devs), ("data",))
+        self.topology = topology
+        self._tier_bws: Optional[Tuple[float, ...]] = None
+        if self.strategy.hierarchical:
+            sizes = self._resolve_tiers(topology)
+            self.strategy = dataclasses.replace(self.strategy, tiers=sizes)
+            if topology is not None and topology.tier_sizes == sizes:
+                self._tier_bws = topology.tier_bws
+            inner = sizes[0]
+            if len(sizes) > 1 and self.dp // inner > 1:
+                # nested axes: nodes (slow tier) x data (in-node, fast tier)
+                self.mesh = Mesh(
+                    np.array(devs).reshape(self.dp // inner, inner),
+                    ("nodes", "data"))
+                self._axes: Union[str, Tuple[str, ...]] = ("nodes", "data")
+            else:
+                self.mesh = Mesh(np.array(devs), ("data",))
+                self._axes = "data"
+        else:
+            self.mesh = Mesh(np.array(devs), ("data",))
+            self._axes = "data"
+        self._data_spec = (P(self._axes) if isinstance(self._axes, str)
+                           else P(tuple(self._axes)))
         self.link_bw = link_bw
         self._times: List[StepTimes] = []
         self._grad_bytes: float = 0.0
         self._build_phases()
+
+    def _resolve_tiers(self, topology: Optional[ClusterSpec]) -> Tuple[int, ...]:
+        """dp-axis fan-out per tier for the hierarchical strategy: the
+        strategy's own sizing when it matches this trainer's device count,
+        else the topology's, else an adapted/degenerate split."""
+        cands = []
+        if self.strategy.tiers:
+            cands.append(tuple(self.strategy.tiers))
+        if topology is not None:
+            cands.append(tuple(topology.tier_sizes))
+        for sizes in cands:
+            if math.prod(sizes) == self.dp:
+                return sizes
+        for sizes in cands:  # keep the in-node fan-out if it divides dp
+            if sizes[0] > 1 and self.dp % sizes[0] == 0:
+                return (sizes[0], self.dp // sizes[0])
+        return (self.dp,)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -113,16 +159,22 @@ class DataParallelTrainer:
                   opt: opt_lib.OptConfig, *,
                   compression: Union[str, Compressor] = "none",
                   devices: Optional[List] = None,
-                  link_bw: float = DEFAULT_LINK_BW) -> "DataParallelTrainer":
+                  link_bw: float = DEFAULT_LINK_BW,
+                  topology: Optional[ClusterSpec] = None) -> "DataParallelTrainer":
         """Trainer whose sync strategy comes from a planner ``Plan`` —
-        ``resolve_sync()`` supplies the Lemma-3.2-sized strategy instance."""
+        ``resolve_sync()`` supplies the Lemma-3.2-sized strategy instance
+        (the topology defaults to the plan's own)."""
+        if topology is None:
+            topology = plan.cluster
         return cls(cfg, run, opt, strategy=plan.resolve_sync(),
-                   compression=compression, devices=devices, link_bw=link_bw)
+                   compression=compression, devices=devices, link_bw=link_bw,
+                   topology=topology)
 
     # ------------------------------------------------------------------
     def _build_phases(self):
         grads_of = build_grad_fn(self.cfg, self.run)
         strat, comp, dp = self.strategy, self.compressor, self.dp
+        axes, dspec = self._axes, self._data_spec
 
         def grad_phase(params, batch):
             # per-device local grads; stacked on a fresh leading data axis
@@ -131,22 +183,22 @@ class DataParallelTrainer:
 
         self._grad_fn = jax.jit(shard_map(
             grad_phase, mesh=self.mesh,
-            in_specs=(P(), P("data")), out_specs=P("data")))
+            in_specs=(P(), dspec), out_specs=dspec))
 
         def sync_phase(gstack, efstack):
             grads = _unstack(gstack)
             ef = _unstack(efstack) if efstack is not None else None
             grads, ef = comp.apply(grads, ef)
-            grads = strat.sync(grads, "data", dp)
+            grads = strat.sync(grads, axes, dp)
             ef_out = _stack(ef) if ef is not None else None
             return grads, ef_out
 
         # ef may be None (stateless compressor): an empty pytree, for which
-        # the P("data") prefix spec is vacuous
+        # the data-axes prefix spec is vacuous
         self._sync_fn = jax.jit(shard_map(
             sync_phase, mesh=self.mesh,
-            in_specs=(P("data"), P("data")),
-            out_specs=(P(), P("data"))))
+            in_specs=(dspec, dspec),
+            out_specs=(P(), dspec)))
 
         self._update_fn = jax.jit(
             lambda p, s, g: opt_lib.apply_updates(self.opt, p, g, s),
@@ -165,7 +217,7 @@ class DataParallelTrainer:
             zeros = jax.tree_util.tree_map(
                 lambda a: jnp.zeros((self.dp,) + a.shape, jnp.float32), params)
             state["ef"] = jax.device_put(
-                zeros, NamedSharding(self.mesh, P("data")))
+                zeros, NamedSharding(self.mesh, self._data_spec))
         self._grad_bytes = 4.0 * sum(
             int(np.prod(a.shape))
             for a in jax.tree_util.tree_leaves(params))
@@ -212,7 +264,7 @@ class DataParallelTrainer:
                 int(np.prod(a.shape))
                 for a in jax.tree_util.tree_leaves(params))
         batch_sharding = {
-            k: NamedSharding(self.mesh, P("data"))
+            k: NamedSharding(self.mesh, self._data_spec)
             for k in ("tokens", "labels", "image_embeds")}
         res = loop_lib.train(
             self.cfg, self.run, self.opt, batch=batch, seq=seq, steps=steps,
@@ -233,7 +285,7 @@ class DataParallelTrainer:
         s_p = self._grad_bytes
         wire_payload = self.compressor.wire_bytes(s_p)
         predicted = self.strategy.predicted_comm_time(
-            wire_payload, self.dp, self.link_bw)
+            wire_payload, self.dp, self.link_bw, tier_bws=self._tier_bws)
         r_o = (float(np.mean([t.r_o() for t in steady])) if steady else 0.0)
         return SyncReport(
             strategy=self.strategy.name, compression=self.compressor.name,
@@ -246,4 +298,8 @@ class DataParallelTrainer:
             masked_measured=comm <= compute,
             masked_predicted=predicted <= compute,
             r_o_measured=r_o,
+            tiers=self.strategy.tiers,
+            wire_bytes_by_tier=(
+                self.strategy.wire_bytes_by_tier(wire_payload, self.dp)
+                if self.strategy.hierarchical else None),
         )

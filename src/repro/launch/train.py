@@ -31,7 +31,8 @@ def build_spec(args) -> JobSpec:
         arch=args.arch, reduced=args.reduced, steps=args.steps,
         batch=args.batch, seq=args.seq, lr=args.lr,
         use_planner=args.plan, dp=args.dp, sync=args.sync,
-        compress=args.compress, ckpt_dir=args.ckpt_dir,
+        compress=args.compress, topology=args.topology,
+        ckpt_dir=args.ckpt_dir,
         ckpt_every=50 if args.ckpt_dir else 0)
 
 
@@ -59,6 +60,9 @@ def build_parser() -> argparse.ArgumentParser:
                          "planner's sync_schedule")
     ap.add_argument("--compress", default="none",
                     help="gradient compression: none|bf16|int8|topk")
+    ap.add_argument("--topology", default="",
+                    help="named cluster topology (repro.core.hardware."
+                         "CLUSTERS, e.g. 2x4); empty = flat mesh")
     ap.add_argument("--report-out", default="",
                     help="write the unified Report JSON here")
     return ap

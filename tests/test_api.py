@@ -208,4 +208,8 @@ def test_sync_benchmark_emits_unified_schema(tmp_path):
     assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
     d = json.loads(out.read_text())
     validate_report(d)
-    assert d["kind"] == "bench" and len(d["measured"]["runs"]) == 3
+    # one run per member of the strategy zoo (no compression grid in --quick)
+    from repro.distributed.collectives import STRATEGIES
+
+    assert d["kind"] == "bench" and len(d["measured"]["runs"]) == len(STRATEGIES)
+    assert {r["strategy"] for r in d["measured"]["runs"]} == set(STRATEGIES)

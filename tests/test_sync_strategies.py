@@ -52,10 +52,56 @@ def test_wire_bytes_and_lemma_predictions():
         prev = t
     assert get_strategy("parameter_server").wire_bytes(s_p, dp) == 2.0 * s_p
 
-    # dp=1 edge: nothing crosses the wire for the collective schedules
-    assert ar.wire_bytes(s_p, 1) == 0.0
+    # dp=1 edge: nothing crosses the wire for ANY schedule — including the
+    # parameter server, whose old form charged 2*S_p with no second worker
     for name in STRATEGIES:
-        assert get_strategy(name).name == name
+        strat = get_strategy(name)
+        assert strat.name == name
+        assert strat.wire_bytes(s_p, 1) == 0.0
+        assert strat.predicted_comm_time(s_p, 1, bw) == 0.0
+
+
+def test_parameter_server_rejects_explicit_zero_servers():
+    """n_servers=None defers to the dynamic N_ps = dp default; an explicit
+    0 (or negative) must raise instead of silently falling back."""
+    from repro.distributed.collectives import get_strategy
+
+    assert get_strategy("parameter_server").n_servers is None
+    assert get_strategy("parameter_server", n_servers=None).n_servers is None
+    with pytest.raises(ValueError):
+        get_strategy("parameter_server", n_servers=0)
+    with pytest.raises(ValueError):
+        get_strategy("parameter_server", n_servers=-2)
+
+
+def test_hier_wire_bytes_by_tier():
+    """Per-tier accounting of the reduction tree: the full payload moves
+    in-node, only the 1/d_inner shard crosses nodes, and the total beats a
+    flat ring's bottleneck-tier traffic."""
+    from repro.core import ps
+    from repro.distributed.collectives import get_strategy
+
+    s_p = 1e9
+    hier = get_strategy("hier_all_reduce", tiers=(4, 2))
+    flat = get_strategy("all_reduce")
+    by_tier = hier.wire_bytes_by_tier(s_p, 8)
+    # tier 0 (in-node, 4 chips): RS + AG of the full payload
+    assert by_tier[0] == pytest.approx(2.0 * s_p * 3 / 4)
+    # tier 1 (cross-node, 2 nodes): only the 1/4 shard is exchanged
+    assert by_tier[1] == pytest.approx(2.0 * (s_p / 4) * 1 / 2)
+    assert sum(by_tier) == pytest.approx(hier.wire_bytes(s_p, 8))
+    assert by_tier == ps.hier_wire_bytes(s_p, (4, 2))
+    # the flat ring pushes its whole wire volume across every spanning tier
+    flat_by_tier = get_strategy("all_reduce").wire_bytes_by_tier(s_p, 8)
+    assert flat_by_tier == (flat.wire_bytes(s_p, 8),)
+    # cross-node bytes: hier moves strictly less than flat
+    assert by_tier[1] < flat.wire_bytes(s_p, 8)
+    # dp=1: nothing anywhere
+    assert all(w == 0.0 for w in hier.wire_bytes_by_tier(s_p, 1))
+    # per-tier pricing: slow outer link dominates a uniform-bw pricing
+    t_uniform = hier.predicted_comm_time(s_p, 8, 1e9)
+    t_tiered = hier.predicted_comm_time(s_p, 8, 1e9, tier_bws=(1e9, 1e7))
+    assert t_tiered > t_uniform
 
 
 def test_compressor_registry_and_ratios():
@@ -180,7 +226,73 @@ def test_strategy_sync_means_match_global_mean():
             np.testing.assert_allclose(w, np.asarray(g), rtol=1e-6, atol=1e-7)
         print(name, n_servers, "mean OK")
     """, devices=8)
-    assert out.count("mean OK") == 4
+    assert out.count("mean OK") == 5
+
+
+def test_hier_all_reduce_mean_on_2x4_topology():
+    """Satellite: the hierarchical strategy, run over nested (nodes, data)
+    shard_map axes on a simulated 2-node x 4-chip topology, returns exactly
+    the global mean — same tolerance as the flat zoo — for both the
+    topology-derived and an awkward adapted tier split."""
+    out = run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.hardware import get_cluster
+    from repro.distributed.collectives import get_strategy
+
+    dp = 8
+    rng = np.random.default_rng(0)
+    gstack = {
+        "w": jnp.asarray(rng.standard_normal((dp, 5, 7)), jnp.float32),
+        "b": {"x": jnp.asarray(rng.standard_normal((dp, 13)), jnp.float32),
+              "y": jnp.asarray(rng.standard_normal((dp, 3, 2, 2)), jnp.float32)},
+    }
+    want = jax.tree_util.tree_map(lambda g: np.asarray(g).mean(0), gstack)
+
+    for tiers in ((4, 2), (2, 4)):  # 2 nodes x 4 chips, and the transpose
+        strat = get_strategy("hier_all_reduce", tiers=tiers)
+        inner = tiers[0]
+        mesh = Mesh(np.array(jax.devices()).reshape(dp // inner, inner),
+                    ("nodes", "data"))
+
+        def sync_one(stack):
+            local = jax.tree_util.tree_map(lambda x: x[0], stack)
+            return strat.sync(local, ("nodes", "data"), dp)
+
+        got = jax.jit(shard_map(
+            sync_one, mesh=mesh, in_specs=(P(("nodes", "data")),),
+            out_specs=P()))(gstack)
+        for w, g in zip(jax.tree_util.tree_leaves(want),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_allclose(w, np.asarray(g), rtol=1e-6, atol=1e-7)
+        print(tiers, "hier mean OK")
+
+    # end to end: DataParallelTrainer builds the nested mesh from the
+    # named 2x4 cluster and reports the per-tier wire split
+    from repro.configs.base import get_config
+    from repro.distributed import DataParallelTrainer
+    from repro.models.blocks import RunConfig
+    from repro.optim.adamw import OptConfig
+
+    cfg = get_config("granite-3-2b").reduced().replace(
+        vocab_size=256, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128)
+    tr = DataParallelTrainer(cfg, RunConfig(attn_impl="dense", remat="none"),
+                             OptConfig(lr=1e-3, warmup_steps=0),
+                             strategy="hier_all_reduce",
+                             topology=get_cluster("2x4"))
+    assert dict(tr.mesh.shape) == {"nodes": 2, "data": 4}
+    assert tr.strategy.tiers == (4, 2)
+    res = tr.train(batch=16, seq=32, steps=3, log_every=0)
+    rep = tr.report()
+    assert rep.tiers == (4, 2)
+    assert len(rep.wire_bytes_by_tier) == 2
+    assert abs(sum(rep.wire_bytes_by_tier) - rep.wire_bytes) < 1e-6
+    assert rep.wire_bytes_by_tier[1] < rep.wire_bytes_by_tier[0]
+    print("trainer hier OK")
+    """, devices=8)
+    assert out.count("hier mean OK") == 2 and "trainer hier OK" in out
 
 
 @pytest.mark.slow

@@ -1,0 +1,338 @@
+"""Topology-aware cluster API: ClusterSpec tiers, tier-aware Lemma 3.2,
+planner schedule selection on hierarchies, Plan topology round-trips, and
+Session.sweep campaigns (the ISSUE-3 acceptance surface)."""
+import json
+
+import pytest
+
+from repro.core import ps
+from repro.core.hardware import (CLUSTERS, ClusterSpec, MeshSpec, MULTI_POD,
+                                 SINGLE_POD, TPU_V5E, Tier, get_cluster)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec geometry + serialization
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_geometry_and_bottleneck():
+    c = get_cluster("2x4")
+    assert c.n_chips == 8
+    assert c.tier_sizes == (4, 2)
+    assert not c.uniform
+    assert c.bottleneck_tier == "cluster"
+    assert c.min_bw == c.tier("cluster").bw < c.tier("node").bw
+
+    flat = ClusterSpec.flat(8)
+    assert flat.n_chips == 8 and flat.uniform
+    assert flat.min_bw == TPU_V5E.link_bw
+    with pytest.raises(KeyError):
+        c.tier("rack")
+    with pytest.raises(KeyError):
+        get_cluster("no-such-cluster")
+
+
+def test_tier_validation():
+    with pytest.raises(ValueError):
+        Tier("node", 0, 1e9)
+    with pytest.raises(ValueError):
+        Tier("node", 4, 0.0)
+    with pytest.raises(ValueError):
+        Tier("node", 4, 1e9, latency=-1.0)
+    with pytest.raises(ValueError):
+        ClusterSpec("empty", TPU_V5E, ())
+
+
+def test_cluster_dict_roundtrip():
+    for name, c in CLUSTERS.items():
+        back = ClusterSpec.from_dict(c.to_dict())
+        assert back == c, name
+    # chip identity survives (the paper-era K80 cluster) …
+    p2 = get_cluster("p2-2x8")
+    assert ClusterSpec.from_dict(p2.to_dict()).chip.name == "k80-gk210"
+    # … and an unknown chip fails loudly instead of silently repricing
+    bad = p2.to_dict()
+    bad["chip"] = "h100-sxm"
+    with pytest.raises(KeyError):
+        ClusterSpec.from_dict(bad)
+
+
+def test_dp_view_packs_tp_innermost():
+    # MULTI_POD: 2 pods x 256 chips, tp=16 consumed in-pod
+    tiers = MULTI_POD.cluster.dp_view(MULTI_POD.dp, MULTI_POD.tp)
+    assert tuple(t.size for t in tiers) == (16, 2)
+    assert tiers[0].name == "pod" and tiers[1].name == "dcn"
+    # flat single pod: one spanning tier of dp
+    tiers = SINGLE_POD.cluster.dp_view(SINGLE_POD.dp, SINGLE_POD.tp)
+    assert tuple(t.size for t in tiers) == (16,)
+    with pytest.raises(ValueError):
+        get_cluster("2x4").dp_view(4, 1)  # 4*1 != 8 chips
+
+
+def test_mesh_cluster_defaults_flat():
+    """Omitted topology => single-tier cluster equivalent to the old
+    scalar-link_bw mesh (backward compatibility)."""
+    mesh = MeshSpec(chips=8, dp=8, tp=1)
+    c = mesh.cluster
+    assert c.uniform and c.n_chips == 8 and c.min_bw == mesh.chip.link_bw
+    m2 = MeshSpec.from_cluster(get_cluster("2x4"))
+    assert (m2.chips, m2.dp, m2.tp) == (8, 8, 1)
+    with pytest.raises(ValueError):
+        MeshSpec.from_cluster(get_cluster("2x4"), tp=3)
+
+
+# ---------------------------------------------------------------------------
+# Tier-aware Lemma 3.2
+# ---------------------------------------------------------------------------
+
+
+def test_hier_wire_bytes_shrinks_outward():
+    """Each outer tier only carries the shard that survived the inner
+    reductions — the FireCaffe reduction-tree property."""
+    wires = ps.hier_wire_bytes(1e9, (4, 2, 2))
+    assert wires[0] == pytest.approx(2e9 * 3 / 4)
+    assert wires[1] == pytest.approx(2 * (1e9 / 4) / 2)
+    assert wires[2] == pytest.approx(2 * (1e9 / 8) / 2)
+    assert wires[0] > wires[1] > wires[2]
+    # degenerate single tier == the flat form
+    assert ps.hier_wire_bytes(1e9, (8,))[0] == ps.flat_wire_bytes(1e9, 8)
+
+
+def test_hier_comm_time_beats_flat_on_slow_cross_tier():
+    c = get_cluster("2x4")
+    tiers = c.dp_view(8, 1)
+    s_p = 1e9
+    hier, per_tier = ps.hier_comm_time(s_p, tiers)
+    flat = ps.flat_wire_bytes(s_p, 8) / c.min_bw
+    assert hier < flat
+    assert [p["tier"] for p in per_tier] == ["node", "cluster"]
+    assert hier == pytest.approx(sum(p["time_s"] for p in per_tier))
+    # predicted_comm_time speaks the same form
+    assert ps.predicted_comm_time("hier_all_reduce", s_p, 8, c.min_bw,
+                                  tiers=tiers) == pytest.approx(hier)
+
+
+def test_ps_placement_regimes():
+    """Lemma 3.2's B_ps is a placement choice: in-node servers ride the
+    fast tier and need fewer of themselves than cross-node servers."""
+    c = get_cluster("2x4")
+    s_p, n_w, t_c = 4e9, 8, 0.5
+    plan = ps.ps_placement_plan(s_p, n_w, c, t_c)
+    assert plan["in_node"]["b_ps"] == c.tiers[0].bw
+    assert plan["cross_node"]["b_ps"] == c.min_bw
+    assert plan["in_node"]["n_ps"] <= plan["cross_node"]["n_ps"]
+    assert plan["recommended"] == "in_node"
+    assert ps.n_parameter_servers_tiered(s_p, n_w, c, t_c,
+                                         placement="in_node") == \
+        plan["in_node"]["n_ps"]
+    # both regimes still satisfy the lemma's maskability
+    for reg in ("in_node", "cross_node"):
+        assert ps.masked(s_p, n_w, plan[reg]["n_ps"], plan[reg]["b_ps"], t_c)
+    with pytest.raises(KeyError):
+        ps.ps_placement_bw(c, "on_the_moon")
+
+
+def test_grad_sync_plan_prices_latency_on_both_sides():
+    """Per-tier latency must hit the flat ring too (it spans every tier),
+    so a latency-heavy hierarchy cannot bias selection flat-ward."""
+    tiers = (Tier("node", 4, 50e9, latency=0.0),
+             Tier("cluster", 2, 2.5e9, latency=5e-3))
+    s_p = 1e6  # tiny payload: latency dominates wire time
+    plan = ps.grad_sync_plan(s_p, tiers, t_c=1.0)
+    hier_time = ps.hier_comm_time(s_p, tiers)[0]
+    flat_time = ps.flat_wire_bytes(s_p, 8) / 2.5e9 + 5e-3
+    assert plan.comm_time == pytest.approx(min(hier_time, flat_time))
+    # uniform branch: a single spanning tier's latency lands in comm_time
+    uni = ps.grad_sync_plan(s_p, (Tier("pod", 8, 50e9, latency=2e-3),),
+                            t_c=1.0)
+    assert uni.comm_time == pytest.approx(
+        ps.flat_wire_bytes(s_p, 8) / 50e9 + 2e-3)
+
+
+def test_grad_sync_plan_uniform_matches_tpu_form():
+    tiers = (Tier("pod", 16, 50e9),)
+    got = ps.grad_sync_plan(8e9, tiers, t_c=1.0)
+    ref = ps.tpu_grad_sync_plan(8e9, 16, 50e9, t_c=1.0)
+    assert got.schedule == ref.schedule == "reduce_scatter_all_gather"
+    assert got.comm_time == ref.comm_time
+    assert got.bottleneck_tier == "pod"
+
+
+def test_grad_sync_plan_picks_hier_on_hierarchy():
+    tiers = get_cluster("2x4").dp_view(8, 1)
+    plan = ps.grad_sync_plan(8e9, tiers, t_c=10.0)
+    assert plan.schedule == "hier_all_reduce"
+    assert plan.per_tier and len(plan.per_tier) == 2
+    assert plan.bottleneck_tier == "cluster"
+    assert plan.comm_time < ps.flat_wire_bytes(8e9, 8) / min(t.bw for t in tiers)
+
+
+# ---------------------------------------------------------------------------
+# Planner: topology changes the plan (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_diverges_flat_vs_tiered_8_chips():
+    """plan() on a 2-node x 4-chip ClusterSpec selects a different sync
+    schedule (and bottleneck tier) than the equivalent flat 8-chip mesh."""
+    from repro.configs.base import get_config, get_shape
+    from repro.core.planner import plan_train
+
+    cfg, shape = get_config("granite-3-2b"), get_shape("train_4k")
+    flat = plan_train(cfg, shape, MeshSpec.from_cluster(get_cluster("flat8")))
+    tiered = plan_train(cfg, shape, MeshSpec.from_cluster(get_cluster("2x4")))
+    assert flat.mesh == tiered.mesh == (8, 1)
+    assert (flat.sync_schedule, flat.bottleneck_tier) != \
+        (tiered.sync_schedule, tiered.bottleneck_tier)
+    assert tiered.sync_schedule == "hier_all_reduce"
+    assert tiered.bottleneck_tier == "cluster"
+    strat = tiered.resolve_sync()
+    assert strat.name == "hier_all_reduce" and strat.tiers == (4, 2)
+
+
+def test_estimate_step_time_prices_tiers():
+    from repro.configs.base import get_config, get_shape
+    from repro.core.planner import estimate_step_time
+
+    cfg, shape = get_config("granite-3-2b"), get_shape("train_4k")
+    flat = estimate_step_time(cfg, shape,
+                              MeshSpec.from_cluster(get_cluster("flat8")),
+                              "block", 1)
+    tiered = estimate_step_time(cfg, shape,
+                                MeshSpec.from_cluster(get_cluster("2x4")),
+                                "block", 1)
+    for terms in (flat, tiered):
+        assert terms["collective"] == pytest.approx(
+            terms["collective_grad"] + terms["collective_tp"])
+    # same compute, but the slow cross-node tier makes sync dearer even
+    # with the hierarchical schedule
+    assert tiered["compute"] == flat["compute"]
+    assert tiered["collective_grad"] > flat["collective_grad"]
+
+
+def test_plan_topology_json_roundtrip_and_legacy_link_bw():
+    from repro.configs.base import get_config, get_shape
+    from repro.core.planner import Plan, plan_train
+
+    p = plan_train(get_config("granite-3-2b"), get_shape("train_4k"),
+                   MeshSpec.from_cluster(get_cluster("2x4")))
+    q = Plan.from_json(p.to_json())
+    assert q == p
+    assert q.cluster == get_cluster("2x4")
+    assert q.link_bw == get_cluster("2x4").min_bw
+    # a pre-topology plan dict (scalar link_bw) migrates to a flat cluster
+    d = p.to_dict()
+    d.pop("topology")
+    d.pop("bottleneck_tier")
+    d["link_bw"] = 7e9
+    legacy = Plan.from_dict(d)
+    assert legacy.cluster is not None and legacy.cluster.uniform
+    assert legacy.link_bw == 7e9
+
+
+# ---------------------------------------------------------------------------
+# Session.sweep acceptance: >= 8 validated cells + Pareto summary
+# ---------------------------------------------------------------------------
+
+
+def test_session_sweep_campaign_pareto():
+    from repro.api import (CAMPAIGN_SCHEMA_ID, Campaign, JobSpec, Session,
+                           validate_report)
+
+    base = JobSpec(arch="granite-3-2b", steps=2, batch=4, seq=32)
+    camp = Session.sweep(base, {
+        "topology": ["flat8", "2x4"],
+        "arch": ["granite-3-2b", "mamba2-780m"],
+        "batch": [4, 8],
+    }, kind="plan")
+    assert len(camp) == 8 and not camp.skipped
+    for rep in camp.reports:
+        validate_report(json.loads(rep.to_json()))
+    summary = camp.summary()
+    assert summary["n_ok"] == 8
+    assert summary["pareto"], "Pareto front must be non-empty"
+    front = camp.pareto()
+    metrics = camp.metrics()
+    # front members are non-dominated
+    for i in front:
+        for j, q in enumerate(metrics):
+            if j == i:
+                continue
+            assert not (q["tokens_per_s"] > metrics[i]["tokens_per_s"]
+                        and q["efficiency"] > metrics[i]["efficiency"])
+    # tiered cells surface the hierarchy in their plan
+    by_topo = {c["topology"]: m for c, m in zip(camp.cells, metrics)}
+    assert by_topo["2x4"]["schedule"] == "hier_all_reduce"
+    assert by_topo["flat8"]["schedule"] != "hier_all_reduce"
+    # the campaign artifact round-trips
+    d = json.loads(camp.to_json())
+    assert d["schema"] == CAMPAIGN_SCHEMA_ID
+    back = Campaign.from_json(camp.to_json())
+    assert len(back) == 8 and back.summary()["pareto_indices"] == \
+        summary["pareto_indices"]
+
+
+def test_sweep_records_invalid_cells_as_skipped():
+    from repro.api import JobSpec, Session
+
+    base = JobSpec(arch="granite-3-2b", steps=2, batch=4, seq=32)
+    camp = Session.sweep(base, {"dp": [1, 3]}, kind="plan")  # 4 % 3 != 0
+    assert len(camp) == 1 and len(camp.skipped) == 1
+    assert "dp" in camp.skipped[0]["cell"]
+    with pytest.raises(ValueError):
+        Session.sweep(base, {}, kind="plan")
+    with pytest.raises(ValueError):
+        Session.sweep(base, {"dp": [1]}, kind="explode")
+
+
+def test_jobspec_topology_validation_and_roundtrip():
+    from repro.api import JobSpec, TOPOLOGIES
+
+    assert "" in TOPOLOGIES and "2x4" in TOPOLOGIES
+    with pytest.raises(ValueError):
+        JobSpec(arch="granite-3-2b", topology="ring-of-fire")
+    spec = JobSpec(arch="granite-3-2b", topology="2x4", steps=2)
+    assert JobSpec.from_json(spec.to_json()) == spec
+
+
+@pytest.mark.slow
+def test_sweep_quick_benchmark_emits_campaign_schema(tmp_path):
+    """The CI smoke cell: `sweep --quick` (1 arch x 2 sync x 2 dp training
+    cells on 2 CPU-pinned devices) must emit a valid campaign artifact.
+    Full sweeps stay out of tier-1 (slow marker)."""
+    import subprocess
+    import sys
+
+    from conftest import REPO
+
+    out = tmp_path / "campaign.json"
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sweep", "--quick",
+         "--out", str(out)],
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd=str(REPO), capture_output=True, text=True, timeout=520)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    from repro.api import Campaign
+
+    camp = Campaign.from_json(out.read_text())
+    assert len(camp) == 4 and camp.kind == "train"
+    m = camp.metrics()
+    assert all(c["source"] == "measured" and c["tokens_per_s"] > 0 for c in m)
+    assert camp.summary()["pareto"]
+
+
+def test_session_predicted_carries_tier_view():
+    from repro.api import JobSpec, Session
+
+    rep = Session(JobSpec(arch="granite-3-2b", steps=2,
+                          topology="2x4")).plan()
+    l32 = rep.predicted["lemma32"]
+    assert l32["schedule"] == "hier_all_reduce"
+    assert l32["bottleneck_tier"] == "cluster"
+    assert l32["ps_placement"]["recommended"] in ("in_node", "cross_node")
+    assert rep.plan["topology"]["name"] == "2x4"
+    # flat session: no placement block, same schema otherwise
+    flat = Session(JobSpec(arch="granite-3-2b", steps=2,
+                           topology="flat8")).plan()
+    assert "ps_placement" not in flat.predicted["lemma32"]
