@@ -11,8 +11,8 @@ import argparse
 import sys
 import time
 
-ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "sweep", "ilp",
-       "dryrun", "roofline")
+ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "sweep",
+       "autotune", "ilp", "dryrun", "roofline")
 
 
 def main() -> None:
@@ -23,7 +23,8 @@ def main() -> None:
     args = ap.parse_args()
     which = [w.strip() for w in args.only.split(",") if w.strip()]
     if args.fast:
-        which = [w for w in which if w not in ("fig2", "fig3", "fig4", "sync")]
+        which = [w for w in which if w not in ("fig2", "fig3", "fig4", "sync",
+                                               "autotune")]
 
     csv_rows = []
     t0 = time.time()
@@ -42,6 +43,8 @@ def main() -> None:
             from benchmarks import sync_strategies as m
         elif name == "sweep":
             from benchmarks import sweep as m
+        elif name == "autotune":
+            from benchmarks import autotune as m
         elif name == "ilp":
             from benchmarks import ilp_planner as m
         elif name == "dryrun":

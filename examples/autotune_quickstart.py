@@ -1,0 +1,41 @@
+"""Autotune quickstart: close the loop from measurement to plan.
+
+One JobSpec with ``tune=True``: the Session times the kernel algorithm
+variants, measures a few trainer steps, calibrates the hardware constants,
+runs the paper's minibatch procedure (largest batch under Eq. 5's
+``m_bound``), and re-plans on the measured numbers.  The following
+``train()`` adopts the tuned knobs, and a calibrated sweep compares
+topologies on measured constants.
+
+    PYTHONPATH=src python examples/autotune_quickstart.py
+"""
+from repro.api import JobSpec, Session
+
+spec = JobSpec(arch="granite-3-2b", reduced=True, steps=6, batch=4, seq=32,
+               log_every=0, tune=True,
+               tune_cache="results/calibration_cache.json")
+sess = Session(spec)
+
+rep = sess.tune()
+t = rep.measured["tuning"]
+print(f"== tuned: minibatch*={t['minibatch']['chosen']} (m_bound), "
+      f"attention -> {t['kernels']['flash_attention']['chosen']}")
+r = t["replan"]
+print(f"   step: measured {r['measured_step_s']*1e3:.1f}ms, "
+      f"calibrated model {r['est_step_time_calibrated_s']*1e3:.1f}ms, "
+      f"datasheet model {r['est_step_time_uncalibrated_s']*1e3:.4g}ms")
+rep.save("results/autotune_tune_report.json")
+
+print("== training with the tuned knobs")
+trep = sess.train()
+m = trep.measured
+print(f"   loss {m['losses'][0]:.3f} -> {m['losses'][-1]:.3f}; "
+      f"{m['tokens_per_s']:,.0f} tok/s")
+
+print("== calibrated sweep: topologies priced on measured constants")
+camp = Session.sweep(spec.replace(tune=False),
+                     {"topology": ["flat8", "2x4"]}, kind="plan",
+                     calibration=sess.tuned.calibration)
+for cell in camp.metrics():
+    print(f"   {cell['topology']:6s} -> {cell['schedule']:26s} "
+          f"{cell['tokens_per_s']:.3g} tok/s (predicted, calibrated)")

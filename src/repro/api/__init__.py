@@ -22,12 +22,13 @@ cell plus a throughput-vs-efficiency Pareto summary):
     camp.summary()["pareto"]
 """
 from repro.api.campaign import CAMPAIGN_SCHEMA_ID, Campaign, pareto_front
-from repro.api.report import KINDS, Report, SCHEMA_ID, validate_report
+from repro.api.report import (KINDS, Report, SCHEMA_ID, TUNING_SCHEMA_ID,
+                              validate_report)
 from repro.api.session import Session
 from repro.api.spec import COMPRESSIONS, JobSpec, MESHES, SYNCS, TOPOLOGIES
 
 __all__ = [
     "JobSpec", "Session", "Report", "Campaign", "validate_report",
-    "pareto_front", "SCHEMA_ID", "CAMPAIGN_SCHEMA_ID", "KINDS", "MESHES",
-    "SYNCS", "COMPRESSIONS", "TOPOLOGIES",
+    "pareto_front", "SCHEMA_ID", "CAMPAIGN_SCHEMA_ID", "TUNING_SCHEMA_ID",
+    "KINDS", "MESHES", "SYNCS", "COMPRESSIONS", "TOPOLOGIES",
 ]

@@ -26,7 +26,11 @@ from pathlib import Path
 from typing import Any, Dict, Union
 
 SCHEMA_ID = "repro.api/report/v1"
-KINDS = ("plan", "dryrun", "train", "serve", "bench")
+# the autotuner's section under measured["tuning"] (Session.tune emits it;
+# repro.core.autotune.TUNING_SCHEMA_ID mirrors this literal — layering keeps
+# core from importing api)
+TUNING_SCHEMA_ID = "repro.api/tuning/v1"
+KINDS = ("plan", "dryrun", "train", "serve", "bench", "tune")
 
 # kinds whose `measured` section must be populated, and the keys that make a
 # measurement comparable across entry points (bench artifacts range from a
@@ -35,7 +39,11 @@ _MEASURED_REQUIRED = {
     "train": ("steps", "loss_last", "tokens_per_s", "r_o", "step_times_mean"),
     "bench": ("tokens_per_s",),
     "serve": ("requests", "tokens_per_s"),
+    "tune": ("tuning",),
 }
+# any report carrying a tuning section (kind "tune", or a train run that
+# adopted tuned knobs) must carry a complete one
+_TUNING_REQUIRED = ("minibatch", "kernels", "calibration", "replan")
 _SPEC_REQUIRED = ("arch", "shape", "reduced", "steps", "batch", "seq", "seed")
 _PLAN_REQUIRED = ("arch", "mesh", "microbatch", "attn_impl", "remat",
                   "sync_schedule", "est_step_time")
@@ -111,4 +119,26 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
     for key in need:
         _require(key in d["measured"],
                  f"measured missing {key!r} for kind {d['kind']!r}")
+    if "tuning" in d["measured"]:
+        _validate_tuning(d["measured"]["tuning"])
     return d
+
+
+def _validate_tuning(t: Any):
+    """Schema check for the ``repro.api/tuning/v1`` section."""
+    _require(isinstance(t, dict),
+             f"measured.tuning must be a dict, got {type(t).__name__}")
+    _require(t.get("schema") == TUNING_SCHEMA_ID,
+             f"tuning schema {t.get('schema')!r} != {TUNING_SCHEMA_ID!r}")
+    for key in _TUNING_REQUIRED:
+        _require(key in t, f"tuning missing {key!r}")
+    for key in _TUNING_REQUIRED:
+        _require(isinstance(t[key], dict), f"tuning.{key} must be a dict, "
+                 f"got {type(t[key]).__name__}")
+    _require("chosen" in t["minibatch"], "tuning.minibatch missing 'chosen'")
+    for op, entry in t["kernels"].items():
+        _require(isinstance(entry, dict) and "chosen" in entry,
+                 f"tuning.kernels[{op!r}] missing 'chosen'")
+    for key in ("measured_step_s", "est_step_time_calibrated_s",
+                "est_step_time_uncalibrated_s"):
+        _require(key in t["replan"], f"tuning.replan missing {key!r}")

@@ -9,13 +9,22 @@ planner prediction and a measured run are directly comparable artifacts.
 The planner always runs on the FULL architecture and the spec's production
 shape/mesh — the paper's procedure sizes the real job; with
 ``spec.reduced`` the *execution* uses the smoke-scale family member.
+
+``tune`` closes the loop on measurements (``repro.core.autotune``): it
+times kernel variants, calibrates the hardware constants, runs the paper's
+minibatch procedure, and re-plans — a session built with ``calibration=``
+(or a ``Session.sweep(calibration=...)`` campaign) prices every prediction
+on those measured constants.  See ``docs/tuning_guide.md``.
 """
 from __future__ import annotations
 
 import itertools
 import math
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence, TYPE_CHECKING
+
+if TYPE_CHECKING:  # import-light: autotune pulls kernels/jax lazily anyway
+    from repro.core.autotune import Calibration, TuneResult
 
 import numpy as np
 
@@ -36,7 +45,8 @@ LEMMA31_G = (2, 4, 8, 16)
 class Session:
     """Execute one JobSpec; every method returns a validated Report."""
 
-    def __init__(self, spec: JobSpec, *, config: Optional[ModelConfig] = None):
+    def __init__(self, spec: JobSpec, *, config: Optional[ModelConfig] = None,
+                 calibration: Optional["Calibration"] = None):
         self.spec = spec
         self.cfg_full = get_config(spec.arch)
         self.cfg = config if config is not None else (
@@ -50,8 +60,15 @@ class Session:
         else:
             self.mesh_spec = SINGLE_POD if spec.mesh == "single" else MULTI_POD
             self.cluster = self.mesh_spec.topology
+        # a Calibration (repro.core.autotune) re-prices the mesh on measured
+        # constants: every plan/prediction this session emits uses them
+        self.calibration = calibration
+        if calibration is not None:
+            self.mesh_spec = calibration.apply(self.mesh_spec)
+            self.cluster = self.mesh_spec.topology
         self._config_override = config is not None
         self._plan: Optional[Plan] = None
+        self._tuned: Optional["TuneResult"] = None
 
     # ------------------------------------------------------------------
     @property
@@ -60,9 +77,27 @@ class Session:
             self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec)
         return self._plan
 
+    @property
+    def tuned(self) -> "TuneResult":
+        """The autotuner's result for this spec (runs the microbenchmarks +
+        calibration on first access; cached for the session)."""
+        if self._tuned is None:
+            from repro.core import autotune
+
+            spec = self.spec
+            self._tuned = autotune.autotune(
+                self.cfg, self.cfg_full, self.shape, self.mesh_spec,
+                batch=spec.batch, seq=spec.seq, steps=spec.tune_steps,
+                dp=spec.dp, seed=spec.seed, cache_path=spec.tune_cache)
+        return self._tuned
+
     def build_run_opt(self):
         """RunConfig/OptConfig for this spec — planner-adopted knobs when
-        ``use_planner`` (exactly what ``launch/train.py --plan`` did)."""
+        ``use_planner`` (exactly what ``launch/train.py --plan`` did), then
+        measured-knob overrides (attention algorithm, feasible microbatch)
+        when ``spec.tune``."""
+        import dataclasses as _dc
+
         from repro.models.blocks import RunConfig
         from repro.optim.adamw import OptConfig
 
@@ -79,6 +114,14 @@ class Session:
             run = RunConfig(attn_impl="auto", remat="block")
             opt = OptConfig(lr=spec.lr, warmup_steps=warmup,
                             total_steps=spec.steps)
+        if spec.tune:
+            t = self.tuned
+            # chosen_microbatch == 0 means the production job fits at no
+            # microbatch — fall back to the most frugal setting (1), never
+            # to 0 (RunConfig's "no accumulation", the *maximal* footprint)
+            run = _dc.replace(
+                run, attn_impl=t.attn_impl(),
+                microbatch=max(min(t.chosen_microbatch, spec.batch), 1))
         return run, opt
 
     # ------------------------------------------------------------------
@@ -114,6 +157,18 @@ class Session:
     # ------------------------------------------------------------------
     # Measured kinds
     # ------------------------------------------------------------------
+    def tune(self) -> Report:
+        """Run the closed-loop autotuner (repro.core.autotune): time the
+        kernel algorithm variants, measure short trainer steps, calibrate
+        the cluster constants, run the paper's minibatch/algorithm
+        procedure, and re-plan on the measured numbers.  Returns a Report
+        of kind ``tune`` whose ``measured["tuning"]`` section carries the
+        ``repro.api/tuning/v1`` schema."""
+        res = self.tuned
+        measured: Dict[str, Any] = dict(res.measured)
+        measured["tuning"] = res.section()
+        return self._report("tune", measured, self._predicted())
+
     def train(self) -> Report:
         """Run the training loop (single-process GSPMD, or the explicit
         data-parallel trainer when ``spec.dp > 0``)."""
@@ -161,6 +216,8 @@ class Session:
         measured = res.summary()
         if sync_rep is not None:
             measured["sync"] = sync_rep.as_dict()
+        if spec.tune:  # the run adopted tuned knobs: record what they were
+            measured["tuning"] = self.tuned.section()
         predicted = self._predicted(measured_r_o=measured["r_o"])
         return self._report(kind, measured, predicted)
 
@@ -209,11 +266,12 @@ class Session:
     # ------------------------------------------------------------------
     # Campaigns: the paper's guidelines as one queryable sweep
     # ------------------------------------------------------------------
-    SWEEP_KINDS = ("plan", "dryrun", "train", "bench", "serve")
+    SWEEP_KINDS = ("plan", "dryrun", "train", "bench", "serve", "tune")
 
     @classmethod
     def sweep(cls, base: JobSpec, grid: Dict[str, Sequence[Any]], *,
-              kind: str = "plan", progress: bool = False) -> Campaign:
+              kind: str = "plan", progress: bool = False,
+              calibration: Optional["Calibration"] = None) -> Campaign:
         """Fan the cartesian product of ``grid`` out over ``base`` and run
         one Session method per cell.
 
@@ -224,6 +282,11 @@ class Session:
         ``serve`` execute.  Cells whose spec is invalid (e.g. batch not
         divisible by dp) or whose run fails land in ``Campaign.skipped``
         with the error, so one bad cell cannot sink the campaign.
+
+        ``calibration`` (a measured ``repro.core.autotune.Calibration``,
+        e.g. ``Session(spec).tuned.calibration``) re-prices every cell on
+        measured constants instead of datasheet numbers, so the campaign's
+        predictive cells are comparable to wall-clock measurements.
 
         Note: predictive kinds only differentiate plan-affecting fields
         (``arch``/``shape``/``mesh``/``topology``) — the planner prices the
@@ -245,7 +308,7 @@ class Session:
             overrides = dict(zip(keys, combo))
             try:
                 spec = base.replace(**overrides)
-                rep = getattr(cls(spec), kind)()
+                rep = getattr(cls(spec, calibration=calibration), kind)()
             except Exception as e:  # record, keep sweeping
                 skipped.append({"cell": overrides, "error": f"{type(e).__name__}: {e}"})
                 if progress:
@@ -337,6 +400,12 @@ class Session:
             },
             "config_override": self._config_override,
         }
+        if self.calibration is not None:
+            meta["calibration"] = {
+                "key": self.calibration.key,
+                "achieved_flops": self.calibration.achieved_flops,
+                "link_bw": self.calibration.link_bw,
+            }
         if (self.spec.topology and self.spec.dp
                 and self.cluster is not None
                 and self.spec.dp != self.cluster.n_chips):

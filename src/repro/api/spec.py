@@ -51,6 +51,12 @@ class JobSpec:
     ckpt_dir: str = ""
     ckpt_every: int = 0
     log_every: int = 10
+    # autotuning (repro.core.autotune via Session.tune):
+    tune: bool = False            # run the autotuner; train/bench adopt its
+                                  # measured kernel + microbatch choices
+    tune_steps: int = 3           # measured trainer steps per calibration
+    tune_cache: str = ""          # JSON calibration-cache path ("" = no
+                                  # persistence across sessions)
     # serving knobs
     s_max: int = 256              # decode cache length
     max_batch: int = 4            # scheduler batch size
@@ -74,7 +80,7 @@ class JobSpec:
             raise ValueError(f"compress must be one of {COMPRESSIONS}, "
                              f"got {self.compress!r}")
         for name in ("steps", "batch", "seq", "s_max", "max_batch", "n_new",
-                     "requests"):
+                     "requests", "tune_steps"):
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be > 0")
         if self.dp < 0:

@@ -1,9 +1,24 @@
-"""Hardware constants and cluster topology.
+"""Hardware constants and cluster topology — the paper's symbol table.
+
+Every symbol of §3 that names a hardware quantity reads off one of these
+classes (units noted per field; see ``docs/paper_map.md`` for the full
+equation-to-module map):
+
+- ``Chip.hbm_bytes``  -> Eq. (5)'s device memory ``M_GPU``        [bytes]
+- ``Chip.peak_flops`` -> the ``T_C`` denominator in the step-time
+  roofline (``planner.estimate_step_time``)                       [FLOP/s]
+- ``Tier.bw``         -> Lemma 3.2's server bandwidth ``B_ps`` and the
+  collective wire bandwidth, per interconnect tier                [bytes/s]
+- ``Tier.latency``    -> the per-phase constant added to each collective
+  hop at that tier                                                [s]
 
 Two layers:
 
 1. :class:`Chip` — the accelerator itself (TPU v5e-class reproduction
    target, plus the paper's 2017 evaluation hardware, AWS P2 / NVIDIA K80).
+   Datasheet constants; :meth:`Chip.scaled` produces the *calibrated*
+   overlay (``repro.core.autotune`` replaces peak FLOP/s and HBM bandwidth
+   with measured ones, marking the chip name with ``+cal``).
 2. :class:`ClusterSpec` — *where the chips sit*: a hierarchy of
    :class:`Tier` levels (chip -> node -> cluster), each with its own
    bandwidth/latency and fan-out.  The paper's guidelines (how many GPUs,
@@ -34,6 +49,27 @@ class Chip:
     hbm_bw: float  # bytes/s
     link_bw: float  # bytes/s per ICI/interconnect link
     vmem_bytes: float = 0.0
+
+    CAL_SUFFIX = "+cal"
+
+    def scaled(self, *, peak_flops: Optional[float] = None,
+               hbm_bw: Optional[float] = None,
+               link_bw: Optional[float] = None) -> "Chip":
+        """A *calibrated* overlay of this chip: same identity, datasheet
+        constants replaced by measured ones (``repro.core.autotune``).
+        The name gains a ``+cal`` marker so plans priced on measurements
+        are distinguishable from datasheet plans."""
+        name = (self.name if self.name.endswith(self.CAL_SUFFIX)
+                else self.name + self.CAL_SUFFIX)
+        return replace(
+            self, name=name,
+            peak_flops=peak_flops if peak_flops else self.peak_flops,
+            hbm_bw=hbm_bw if hbm_bw else self.hbm_bw,
+            link_bw=link_bw if link_bw else self.link_bw)
+
+    @property
+    def calibrated(self) -> bool:
+        return self.name.endswith(self.CAL_SUFFIX)
 
 
 TPU_V5E = Chip(
@@ -170,6 +206,11 @@ class ClusterSpec:
     def from_dict(cls, d: Dict) -> "ClusterSpec":
         chips = {c.name: c for c in (TPU_V5E, K80_GK210)}
         chip_name = d.get("chip", TPU_V5E.name)
+        # calibrated overlays serialize as "<chip>+cal"; the measured
+        # constants live in the tier bandwidths / the calibration cache, so
+        # deserialization falls back to the datasheet base chip
+        if chip_name.endswith(Chip.CAL_SUFFIX):
+            chip_name = chip_name[:-len(Chip.CAL_SUFFIX)]
         if chip_name not in chips:
             raise KeyError(f"unknown chip {chip_name!r} in serialized "
                            f"cluster {d.get('name')!r}; known: {sorted(chips)}")

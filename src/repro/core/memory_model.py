@@ -85,9 +85,32 @@ def m_c(cnn: CNN) -> float:
 
 
 def m_bound(cnn: CNN, x_mini: int, m_gpu_bytes: float) -> float:
-    """Eq. (5), returned in BYTES."""
+    """Eq. (5), returned in BYTES.  Negative when ``x_mini`` is infeasible
+    on a device with ``m_gpu_bytes`` of memory."""
     used_bits = m_fm(cnn, x_mini) + m_mp(cnn) + m_c(cnn)
     return m_gpu_bytes - used_bits / 8.0
+
+
+def max_x_mini(cnn: CNN, m_gpu_bytes: float, *, x_max: int = 1 << 20) -> int:
+    """The paper's minibatch procedure, step 1: the largest ``X_mini`` with
+    ``M_bound >= 0`` (Eq. 5), found by binary search — ``m_fm`` is linear in
+    ``X_mini`` so feasibility is monotone.  Returns 0 when not even
+    ``X_mini = 1`` fits (the model alone exceeds device memory)."""
+    if m_bound(cnn, 1, m_gpu_bytes) < 0:
+        return 0
+    lo, hi = 1, 2
+    while hi <= x_max and m_bound(cnn, hi, m_gpu_bytes) >= 0:
+        lo, hi = hi, hi * 2
+    hi = min(hi, x_max)
+    while lo + 1 < hi:  # invariant: lo feasible, hi infeasible (or > x_max)
+        mid = (lo + hi) // 2
+        if m_bound(cnn, mid, m_gpu_bytes) >= 0:
+            lo = mid
+        else:
+            hi = mid
+    if hi == x_max and m_bound(cnn, hi, m_gpu_bytes) >= 0:
+        return x_max
+    return lo
 
 
 # AlexNet feature extractor (paper Table 2 parameters) + classifier
@@ -203,6 +226,38 @@ def train_memory(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
 
     logits = mb * S * cfg.padded_vocab * 4 * 2 / tp / seq_shard  # f32 + grad
     return TransformerMemory(params, grads, opt_state, activations, logits, 0.0)
+
+
+def max_microbatch(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
+                   fsdp: bool, attn_impl: str, remat: str,
+                   seq_parallel: bool, hbm_bytes: float,
+                   opt_kind: str = "adamw", frac: float = 0.9) -> int:
+    """The paper's minibatch procedure on the transformer memory model: the
+    largest microbatch in ``[1, B/dp]`` whose :func:`train_memory` total
+    stays under ``frac * hbm_bytes`` — activations/logits are linear in the
+    microbatch, so feasibility is monotone and binary search applies.
+    Returns 0 when even microbatch 1 does not fit."""
+    budget = frac * hbm_bytes
+
+    def fits(mb: int) -> bool:
+        mem = train_memory(cfg, shape, dp=dp, tp=tp, fsdp=fsdp,
+                           microbatch=mb, attn_impl=attn_impl, remat=remat,
+                           seq_parallel=seq_parallel, opt_kind=opt_kind)
+        return mem.total <= budget
+
+    b_rep = max(shape.global_batch // dp, 1)
+    if not fits(1):
+        return 0
+    lo, hi = 1, b_rep
+    if fits(hi):
+        return hi
+    while lo + 1 < hi:  # invariant: lo fits, hi does not
+        mid = (lo + hi) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
 
 
 def decode_memory(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,

@@ -46,6 +46,9 @@ class Plan:
     # replaces the old scalar `link_bw` field
     topology: Optional[Dict] = None
     bottleneck_tier: str = ""  # slowest spanning tier for the sync schedule
+    # True when the mesh carried measured (autotune-calibrated) constants
+    # instead of datasheet numbers — see repro.core.autotune.Calibration
+    calibrated: bool = False
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
@@ -220,6 +223,9 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
 def plan_train(cfg: ModelConfig, shape: ShapeConfig,
                mesh: MeshSpec = SINGLE_POD) -> Plan:
     notes: List[str] = []
+    if mesh.chip.calibrated:
+        notes.append(f"priced on measured constants ({mesh.chip.name}: "
+                     f"{mesh.chip.peak_flops:.3g} FLOP/s achieved)")
     hbm = mesh.chip.hbm_bytes
     b_rep = max(shape.global_batch // mesh.dp, 1)
 
@@ -284,7 +290,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         est_step_time=t_best, est_memory_gb=mem.total / 2**30, fits=fits,
         efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp,
         topology=mesh.cluster.to_dict(),
-        bottleneck_tier=sync.bottleneck_tier, notes=notes,
+        bottleneck_tier=sync.bottleneck_tier,
+        calibrated=mesh.chip.calibrated, notes=notes,
     )
 
 
@@ -309,7 +316,8 @@ def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
         microbatch=0, attn_impl="dense", remat="none", seq_parallel=False,
         opt_kind="-", sync_schedule="-", est_step_time=t,
         est_memory_gb=mem.total / 2**30, fits=fits,
-        efficiency=1.0, topology=mesh.cluster.to_dict(), notes=notes,
+        efficiency=1.0, topology=mesh.cluster.to_dict(),
+        calibrated=mesh.chip.calibrated, notes=notes,
     )
 
 

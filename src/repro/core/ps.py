@@ -4,6 +4,28 @@ Paper form:  N_ps >= 2 * S_p * N_w / (B_ps * T_C)
 (total pull+push traffic 2*S_p per worker per step, spread over N_ps servers
 of bandwidth B_ps, hidden behind compute T_C).
 
+Equation map (see ``docs/paper_map.md``; units per symbol: S_p / wire
+bytes in **bytes**, B_ps / bw in **bytes/s**, T_C / comm times in
+**seconds**, N_w / N_ps / dp dimensionless counts):
+
+- :func:`n_parameter_servers`        — Eq. (8), the lemma's N_ps ceiling
+- :func:`io_time`                    — Eq. (7) LHS, one pull+push round [s]
+- :func:`masked`                     — Eq. (7) as a predicate (io <= T_C)
+- :func:`ps_placement_bw`,
+  :func:`n_parameter_servers_tiered`,
+  :func:`ps_placement_plan`          — Eq. (8) with B_ps read off a
+  topology tier (in-node vs cross-node server placement)
+- :func:`flat_wire_bytes`            — ring AR / RS+AG wire volume
+  2*S_p*(dp-1)/dp per worker [bytes]
+- :func:`hier_wire_bytes`,
+  :func:`hier_comm_time`             — the FireCaffe reduction-tree
+  analogue: per-tier wire bytes and summed per-phase time
+- :func:`predicted_comm_time`        — Lemma 3.2's comm-time prediction
+  for any runnable schedule in :data:`SCHEDULES`
+- :func:`tpu_grad_sync_plan`,
+  :func:`grad_sync_plan`             — the lemma as a *decision*: pick the
+  schedule whose comm time masks behind T_C on this topology
+
 TPU mapping (DESIGN.md §2): the "PS cluster" is the data axis itself with
 ZeRO-sharded optimizer state. The same inequality decides whether gradient
 synchronization (reduce-scatter + all-gather == pull+push) hides behind

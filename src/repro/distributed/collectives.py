@@ -21,6 +21,26 @@ is exactly the degree of freedom the paper's Lemma 3.2 prices:
   the surviving 1/node shard *across* nodes (slow tier), all-gather back
   in-node. Executed via nested shard_map axes ``(nodes, data)``; per-tier
   wire bytes come from :func:`repro.core.ps.hier_wire_bytes`.
+
+Equation map (units: payload ``s_p`` and wire bytes in **bytes**,
+bandwidths in **bytes/s**, times in **seconds**; see ``docs/paper_map.md``):
+
+- :meth:`SyncStrategy.wire_bytes`          — Lemma 3.2's per-worker wire
+  volume for this schedule: 2*S_p (parameter_server, Eq. 7's push+pull),
+  2*S_p*(dp-1)/dp (ring AR / RS+AG), or the tier sum of
+  :func:`repro.core.ps.hier_wire_bytes` (hierarchical)
+- :meth:`SyncStrategy.wire_bytes_by_tier`  — the same volume attributed to
+  each topology tier (flat schedules pay full payload on every spanning
+  tier; the tree only moves the surviving shard outward)
+- :meth:`SyncStrategy.predicted_comm_time` — Eq. (7)'s comm time for this
+  schedule/payload, delegating to :func:`repro.core.ps.predicted_comm_time`
+- :func:`get_strategy`                     — name -> executable schedule;
+  ``parameter_server`` takes Eq. (8)'s ``n_servers``
+  (:func:`repro.core.ps.n_parameter_servers`)
+
+The autotuner (``repro.core.autotune``) closes the measured loop: a
+``SyncReport``'s ``effective_link_bw`` (wire bytes / measured sync time)
+re-prices these predictions on the bandwidth the wire actually delivered.
 """
 from __future__ import annotations
 

@@ -73,8 +73,20 @@ class SyncReport:
     tiers: Optional[Tuple[int, ...]] = None
     wire_bytes_by_tier: Optional[Tuple[float, ...]] = None
 
+    @property
+    def effective_link_bw(self) -> float:
+        """Measured bytes/s the sync phase actually moved per worker —
+        the autotuner's feedback path: ``repro.core.autotune`` fits the
+        calibrated tier bandwidths from this instead of the datasheet
+        ``link_bw`` (0.0 when nothing crossed the wire)."""
+        if self.measured_comm_s <= 0:
+            return 0.0
+        return self.wire_bytes / self.measured_comm_s
+
     def as_dict(self) -> Dict[str, Any]:
-        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+        d = {k: getattr(self, k) for k in self.__dataclass_fields__}
+        d["effective_link_bw"] = self.effective_link_bw
+        return d
 
 
 def _stack(tree):

@@ -48,3 +48,77 @@ def ssd_scan(x, dt, a_neg, b_mat, c_mat, *, chunk=256):
         x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), a_neg, b_mat, c_mat,
         chunk=chunk, interpret=_interpret())
     return y.transpose(0, 2, 1, 3), h
+
+
+# ---------------------------------------------------------------------------
+# Tuning registry — the autotuner's view of this layer
+# ---------------------------------------------------------------------------
+# Every op the paper's "choose the computation algorithm" procedure can pick
+# between is enumerable here: `tune_inputs(op)` builds representative
+# kernel-layout inputs, `tune_candidates(op)` returns the named variants
+# (pallas kernel vs jnp reference, and per-chunk schedules for the scan).
+# `repro.core.autotune` times these and records the fastest feasible one.
+
+TUNABLE_OPS = ("flash_attention", "decode_attention", "ssd_scan")
+
+
+def tune_inputs(op: str, *, seed: int = 0, batch: int = 1, seq: int = 128,
+                heads: int = 2, head_dim: int = 64, ssm_p: int = 32,
+                ssm_n: int = 16):
+    """Representative random inputs for ``op`` in KERNEL layout (B,H,S,D)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    if op == "flash_attention":
+        q = jax.random.normal(ks[0], (batch, heads, seq, head_dim))
+        k = jax.random.normal(ks[1], (batch, heads, seq, head_dim))
+        v = jax.random.normal(ks[2], (batch, heads, seq, head_dim))
+        return (q, k, v)
+    if op == "decode_attention":
+        q = jax.random.normal(ks[0], (batch, heads, head_dim))
+        k = jax.random.normal(ks[1], (batch, heads, seq, head_dim))
+        v = jax.random.normal(ks[2], (batch, heads, seq, head_dim))
+        pos = jnp.full((batch,), seq - 1, jnp.int32)
+        return (q, k, v, pos)
+    if op == "ssd_scan":
+        x = jax.random.normal(ks[0], (batch, heads, seq, ssm_p))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (batch, heads, seq)))
+        a_neg = -jnp.exp(jax.random.normal(ks[2], (heads,)) * 0.5)
+        b = jax.random.normal(ks[3], (batch, seq, ssm_n))
+        c = jax.random.normal(ks[4], (batch, seq, ssm_n))
+        return (x, dt, a_neg, b, c)
+    raise KeyError(f"unknown tunable op {op!r}; known: {TUNABLE_OPS}")
+
+
+def tune_candidates(op: str, *, ssd_chunks=(32, 64, 128)):
+    """Named algorithm variants for ``op``, each a callable on the arrays
+    from :func:`tune_inputs`.  ``pallas`` variants run interpreted on CPU
+    and compiled on TPU (same code path as the model)."""
+    if op == "flash_attention":
+        def _scale(q):
+            return 1.0 / (q.shape[-1] ** 0.5)
+        return {
+            "pallas": lambda q, k, v: fa_k.flash_attention(
+                q, k, v, scale=_scale(q), interpret=_interpret()),
+            "ref": lambda q, k, v: _ref().flash_attention_ref(
+                q, k, v, scale=_scale(q)),
+        }
+    if op == "decode_attention":
+        return {
+            "pallas": lambda q, k, v, pos: dec_k.decode_attention(
+                q, k, v, pos, scale=1.0 / (q.shape[-1] ** 0.5),
+                interpret=_interpret()),
+            "ref": lambda q, k, v, pos: _ref().decode_attention_ref(
+                q, k, v, pos, scale=1.0 / (q.shape[-1] ** 0.5)),
+        }
+    if op == "ssd_scan":
+        def _chunk_variant(c):
+            return lambda *a: ssd_k.ssd_scan(*a, chunk=c,
+                                             interpret=_interpret())
+        out = {f"pallas_chunk{c}": _chunk_variant(c) for c in ssd_chunks}
+        out["ref"] = lambda *a: _ref().ssd_scan_ref(*a)
+        return out
+    raise KeyError(f"unknown tunable op {op!r}; known: {TUNABLE_OPS}")
+
+
+def _ref():
+    from repro.kernels import ref
+    return ref

@@ -14,7 +14,10 @@ the planner's runtime knobs (microbatch / attention impl / remat /
 optimizer).  ``--dp N`` switches to the explicit data-parallel trainer: set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the data axis has
 real (simulated) devices; ``--sync auto`` resolves the planner's
-``Plan.sync_schedule`` to a runnable strategy.
+``Plan.sync_schedule`` to a runnable strategy.  ``--autotune`` runs the
+closed-loop autotuner first (``Session.tune``: measured kernel-variant
+choice + hardware calibration, see ``docs/tuning_guide.md``) and adopts its
+knobs; the calibration persists in ``--tune-cache``.
 """
 from __future__ import annotations
 
@@ -32,6 +35,7 @@ def build_spec(args) -> JobSpec:
         batch=args.batch, seq=args.seq, lr=args.lr,
         use_planner=args.plan, dp=args.dp, sync=args.sync,
         compress=args.compress, topology=args.topology,
+        tune=args.autotune, tune_cache=args.tune_cache,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=50 if args.ckpt_dir else 0)
 
@@ -63,6 +67,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--topology", default="",
                     help="named cluster topology (repro.core.hardware."
                          "CLUSTERS, e.g. 2x4); empty = flat mesh")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the closed-loop autotuner first (measure "
+                         "kernel variants + calibrate the hardware "
+                         "constants) and adopt its knobs for the run")
+    ap.add_argument("--tune-cache", default="results/calibration_cache.json",
+                    help="calibration-cache JSON for --autotune "
+                         "('' disables persistence)")
     ap.add_argument("--report-out", default="",
                     help="write the unified Report JSON here")
     return ap
@@ -79,6 +90,15 @@ def main():
     if args.dp and args.sync == "auto":
         print(f"sync resolved from planner: "
               f"{sess.resolved_plan.sync_schedule}")
+
+    if args.autotune:
+        t = sess.tuned
+        r = t.replan
+        print(f"autotune: minibatch*={t.chosen_minibatch} (m_bound), "
+              f"microbatch*={t.chosen_microbatch}, attn={t.attn_impl()}; "
+              f"step predicted {r['est_step_time_calibrated_s']*1e3:.1f}ms "
+              f"calibrated vs {r['est_step_time_uncalibrated_s']*1e3:.3g}ms "
+              f"datasheet (measured {r['measured_step_s']*1e3:.1f}ms)")
 
     rep = sess.train()
     if "sync" in rep.measured:

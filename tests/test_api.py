@@ -169,6 +169,54 @@ def test_validate_report_rejects_malformed():
         validate_report(bad)
 
 
+def test_validate_report_rejects_malformed_tuning_section():
+    """The repro.api/tuning/v1 section is validated whenever present —
+    a tune-kind report without it, or with a wrong/incomplete one, fails."""
+    spec = JobSpec(arch="granite-3-2b", steps=2)
+    good = Session(spec).plan().to_dict()
+    # kind "tune" with no tuning section at all
+    bad = json.loads(json.dumps(good))
+    bad["kind"] = "tune"
+    with pytest.raises(ValueError, match="tuning"):
+        validate_report(bad)
+    # a structurally complete section validates...
+    tuning = {
+        "schema": "repro.api/tuning/v1",
+        "minibatch": {"chosen": 128},
+        "kernels": {"flash_attention": {"chosen": "ref", "times_s": {}}},
+        "calibration": {"achieved_flops": 1e10},
+        "replan": {"measured_step_s": 0.01,
+                   "est_step_time_calibrated_s": 0.01,
+                   "est_step_time_uncalibrated_s": 1e-5},
+    }
+    ok = json.loads(json.dumps(good))
+    ok["kind"] = "tune"
+    ok["measured"]["tuning"] = tuning
+    validate_report(ok)
+    # ...and each schema violation is rejected, even on non-tune kinds
+    for breakage in (
+        lambda t: t.update(schema="repro.api/tuning/v0"),
+        lambda t: t.pop("minibatch"),
+        lambda t: t["minibatch"].pop("chosen"),
+        lambda t: t.pop("calibration"),
+        lambda t: t["replan"].pop("measured_step_s"),
+        lambda t: t["kernels"]["flash_attention"].pop("chosen"),
+        # a stringly replan must not pass via substring containment
+        lambda t: t.update(replan="measured_step_s est_step_time_"
+                                  "calibrated_s est_step_time_"
+                                  "uncalibrated_s"),
+        lambda t: t.update(calibration="not-a-dict"),
+    ):
+        bad = json.loads(json.dumps(ok))
+        breakage(bad["measured"]["tuning"])
+        with pytest.raises(ValueError):
+            validate_report(bad)
+    bad = json.loads(json.dumps(good))  # kind "plan" with a broken section
+    bad["measured"]["tuning"] = {"schema": "nope"}
+    with pytest.raises(ValueError):
+        validate_report(bad)
+
+
 @pytest.mark.slow
 def test_session_serve_and_dp_bench_reports():
     out = run_sub("""

@@ -1,0 +1,98 @@
+"""docs-check — keep the docs/ site honest.
+
+Two checks, both CI-enforced (.github/workflows/ci.yml `docs-check` job):
+
+1. **Links**: every intra-repo markdown link in README.md, docs/*.md and
+   the root *.md files must resolve to an existing file (anchors are
+   stripped; external http(s)/mailto links are skipped).
+2. **Snippets**: the ``python`` code blocks embedded in
+   ``docs/tuning_guide.md`` execute top to bottom in one namespace, like a
+   notebook — the guide's walkthrough is run, not just rendered.  Sized for
+   CPU (--quick-scale configs inside the doc itself).
+
+    PYTHONPATH=src python tools/docs_check.py [--links-only]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# [text](target) — excluding images' ! prefix is unnecessary (images are
+# links too and must also resolve)
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+
+SNIPPET_DOCS = ("docs/tuning_guide.md",)
+
+
+def iter_doc_files():
+    yield from sorted(REPO.glob("*.md"))
+    yield from sorted((REPO / "docs").glob("*.md"))
+
+
+def check_links() -> list:
+    """Return a list of "file: broken-target" strings."""
+    broken = []
+    for md in iter_doc_files():
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:  # pure in-page anchor
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                broken.append(f"{md.relative_to(REPO)}: {target}")
+    return broken
+
+
+def run_snippets(doc: str) -> int:
+    """Execute the doc's ```python blocks sequentially in one namespace;
+    returns the number of blocks run."""
+    text = (REPO / doc).read_text()
+    blocks = _FENCE_RE.findall(text)
+    ns: dict = {"__name__": f"docs_check:{doc}"}
+    for i, block in enumerate(blocks):
+        t0 = time.time()
+        try:
+            exec(compile(block, f"{doc}[snippet {i + 1}]", "exec"), ns)
+        except Exception:
+            print(f"FAIL {doc} snippet {i + 1}:\n{block}", file=sys.stderr)
+            raise
+        print(f"  ok {doc} snippet {i + 1}/{len(blocks)} "
+              f"({time.time() - t0:.1f}s)")
+    return len(blocks)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--links-only", action="store_true",
+                    help="skip executing the embedded snippets")
+    args = ap.parse_args(argv)
+
+    broken = check_links()
+    if broken:
+        print("broken intra-repo links:", file=sys.stderr)
+        for b in broken:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    n_files = len(list(iter_doc_files()))
+    print(f"links ok across {n_files} markdown files")
+
+    if not args.links_only:
+        # pin the backend before anything imports jax (libtpu probe stall)
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        sys.path.insert(0, str(REPO / "src"))
+        for doc in SNIPPET_DOCS:
+            n = run_snippets(doc)
+            print(f"snippets ok: {doc} ({n} blocks)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
