@@ -28,10 +28,11 @@ def _grids(args):
         return {"sync": ["all_reduce", "reduce_scatter_all_gather"],
                 "dp": [1, 2]}
     # predictive (plan/dryrun) cells only see plan-affecting fields — the
-    # planner prices (arch, shape, topology), not execution knobs like
-    # batch/compress/dp; sweep those with --kind train instead
+    # planner prices (arch, shape, topology, sync_overlap), not execution
+    # knobs like batch/compress/dp; sweep those with --kind train instead
     archs = [args.arch] + [a for a in ("mamba2-780m",) if a != args.arch]
-    return {"topology": ["flat8", "2x4", "4x4-ib", "pod"], "arch": archs}
+    return {"topology": ["flat8", "2x4", "4x4-ib", "pod"], "arch": archs,
+            "sync_overlap": [False, True]}
 
 
 def main(argv=None):

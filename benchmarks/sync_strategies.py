@@ -9,10 +9,13 @@ Lemma 3.2 prediction:
 
     PYTHONPATH=src python -m benchmarks.sync_strategies \
         [--steps 6] [--batch 16] [--seq 64] [--devices 8] [--quick] \
-        [--out results/sync_strategies.json]
+        [--overlap [--bucket-mb 4]] [--out results/sync_strategies.json]
 
 ``--quick`` is the CI smoke setting: 2 devices, 2 steps, tiny batch, no
 compression grid — just enough to prove the public surface end to end.
+``--overlap`` additionally runs every kept combination with bucketed
+comm/compute overlap (repro.distributed.overlap), so the report carries
+serial vs overlapped side by side with per-bucket timings.
 
 Also callable from the harness (``python -m benchmarks.run --only sync``),
 where it re-execs itself in a subprocess so the forced device count applies
@@ -54,7 +57,9 @@ def _bench(args) -> dict:
 
     spec = JobSpec(arch=args.arch, reduced=True, steps=args.steps,
                    batch=args.batch, seq=args.seq, dp=args.devices,
-                   sync="auto", log_every=0)
+                   sync="auto", log_every=0,
+                   sync_overlap=bool(args.overlap),
+                   bucket_mb=max(args.bucket_mb, 0.0))
     sess = Session(spec)
     cfg = get_config(args.arch).reduced()
     opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=args.steps)
@@ -83,6 +88,7 @@ def _bench(args) -> dict:
 
     from repro.core.hardware import get_cluster
 
+    overlap_variants = [False] + ([True] if args.overlap else [])
     for strat_name in STRATEGIES:
         for comp_name in COMPRESSORS:
             if comp_name != "none" and (args.quick or strat_name != "all_reduce"
@@ -92,42 +98,56 @@ def _bench(args) -> dict:
             # device count allows one (else it degenerates to RS+AG)
             topo = (get_cluster("2x4")
                     if strat_name == "hier_all_reduce" and dp == 8 else None)
-            tr = DataParallelTrainer(cfg, run, opt, strategy=strat_name,
-                                     compression=comp_name,
-                                     devices=jax.devices()[:dp],
-                                     topology=topo)
-            res = tr.train(batch=args.batch, seq=args.seq, steps=args.steps,
-                           seed=0, log_every=0)
-            rep = tr.report()
+            for overlapped in overlap_variants:
+                # the fused path only engages after the calibration steps,
+                # so overlapped runs need a few extra of them
+                steps = max(args.steps, 6) if overlapped else args.steps
+                tr = DataParallelTrainer(cfg, run, opt, strategy=strat_name,
+                                         compression=comp_name,
+                                         devices=jax.devices()[:dp],
+                                         topology=topo,
+                                         sync_overlap=overlapped,
+                                         bucket_mb=args.bucket_mb or 4.0)
+                res = tr.train(batch=args.batch, seq=args.seq, steps=steps,
+                               seed=0, log_every=0)
+                rep = tr.report()
 
-            # update-equivalence vs baseline on the deterministic batch
-            p0, st0 = tr.init(0)
-            b_sh = {k: jax.device_put(v, NamedSharding(tr.mesh, P("data")))
-                    for k, v in batch1.items()}
-            p1, _, m1 = tr.step_fn()(p0, st0, b_sh)
-            rtol, atol = TOLERANCES[comp_name]
-            max_diff = max(
-                float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
-                for a, b in zip(jax.tree_util.tree_leaves(p_ref),
-                                jax.tree_util.tree_leaves(p1)))
-            ok = all(
-                np.allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
-                for a, b in zip(jax.tree_util.tree_leaves(p_ref),
-                                jax.tree_util.tree_leaves(p1)))
+                # update-equivalence vs baseline on the deterministic batch
+                # (an overlapped trainer's first step runs the serial-
+                # bucketed calibration path — numerically the same step)
+                p0, st0 = tr.init(0)
+                b_sh = {k: jax.device_put(v, NamedSharding(tr.mesh, P("data")))
+                        for k, v in batch1.items()}
+                p1, _, m1 = tr.step_fn()(p0, st0, b_sh)
+                rtol, atol = TOLERANCES[comp_name]
+                max_diff = max(
+                    float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+                    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                                    jax.tree_util.tree_leaves(p1)))
+                ok = all(
+                    np.allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                                atol=atol)
+                    for a, b in zip(jax.tree_util.tree_leaves(p_ref),
+                                    jax.tree_util.tree_leaves(p1)))
 
-            entry = rep.as_dict()
-            entry.update(
-                matches_baseline=bool(ok), max_param_diff=max_diff,
-                tolerance={"rtol": rtol, "atol": atol},
-                loss_first=float(res.losses[0]), loss_last=float(res.losses[-1]),
-                tokens_per_s=res.tokens_per_s, r_o=res.mean_r_o)
-            measured["runs"].append(entry)
-            print(f"{strat_name:26s} {comp_name:5s} "
-                  f"comm {rep.measured_comm_s*1e3:7.1f}ms "
-                  f"(lemma {rep.predicted_comm_s*1e3:7.1f}ms) "
-                  f"T_C {rep.measured_compute_s*1e3:7.1f}ms "
-                  f"masked={rep.masked_measured} match={ok} "
-                  f"maxdiff={max_diff:.2e}", flush=True)
+                entry = rep.as_dict()
+                entry.update(
+                    matches_baseline=bool(ok), max_param_diff=max_diff,
+                    tolerance={"rtol": rtol, "atol": atol},
+                    loss_first=float(res.losses[0]),
+                    loss_last=float(res.losses[-1]),
+                    tokens_per_s=res.tokens_per_s, r_o=res.mean_r_o)
+                measured["runs"].append(entry)
+                tag = "overlap" if overlapped else "serial "
+                extra = (f" exposed {rep.exposed_comm_time*1e3:7.1f}ms "
+                         f"hid {rep.overlap_fraction:4.0%} "
+                         f"[{rep.n_buckets} buckets]" if overlapped else "")
+                print(f"{strat_name:26s} {comp_name:5s} {tag} "
+                      f"comm {rep.measured_comm_s*1e3:7.1f}ms "
+                      f"(lemma {rep.predicted_comm_s*1e3:7.1f}ms) "
+                      f"T_C {rep.measured_compute_s*1e3:7.1f}ms "
+                      f"masked={rep.masked_measured} match={ok} "
+                      f"maxdiff={max_diff:.2e}{extra}", flush=True)
 
     # the lemma's sizing view for this payload on the emulated link
     s_p = 4.0 * sum(int(np.prod(a.shape))
@@ -147,6 +167,7 @@ def _bench(args) -> dict:
     }
     meta = sess.report_meta()
     meta.update(benchmark="sync_strategies", quick=bool(args.quick),
+                overlap=bool(args.overlap),
                 run_config={"attn_impl": run.attn_impl, "remat": run.remat})
     return Report(kind="bench", spec=spec.to_dict(),
                   plan=sess.resolved_plan.to_dict(),
@@ -163,6 +184,14 @@ def main(argv=None):
     ap.add_argument("--devices", type=int, default=8)
     ap.add_argument("--full-grid", action="store_true",
                     help="run every strategy x compression combination")
+    ap.add_argument("--overlap", action="store_true",
+                    help="also run every kept combination with bucketed "
+                         "comm/compute overlap, so the report shows serial "
+                         "vs overlapped side by side (incl. per-bucket "
+                         "timings)")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="sync-bucket size target in MiB for --overlap "
+                         "(0 = default)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: 2 devices, 2 steps, tiny batch, "
                          "no compression grid")
@@ -170,6 +199,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.quick:
         args.devices, args.steps, args.batch, args.seq = 2, 2, 4, 32
+        if args.overlap and not args.bucket_mb:
+            # reduced-config gradients are a few MiB: smaller buckets keep
+            # the bucketed path visible in the CI artifact
+            args.bucket_mb = 0.5
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")

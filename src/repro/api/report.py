@@ -121,7 +121,39 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
                  f"measured missing {key!r} for kind {d['kind']!r}")
     if "tuning" in d["measured"]:
         _validate_tuning(d["measured"]["tuning"])
+    if "sync" in d["measured"]:
+        _validate_sync(d["measured"]["sync"])
     return d
+
+
+# keys an overlapped SyncReport must carry in measured["sync"] (see
+# repro.distributed.trainer.SyncReport's bucketed-overlap block and
+# docs/schemas.md)
+_SYNC_OVERLAP_REQUIRED = ("n_buckets", "overlap_fraction",
+                          "exposed_comm_time", "measured_comm_s",
+                          "bucket_sizes_bytes", "per_bucket_comm_s",
+                          "overlapped_step_s")
+
+
+def _validate_sync(s: Any):
+    """Schema check for a measured SyncReport dict; the overlap fields are
+    required — and bounded — whenever the run declared ``sync_overlap``."""
+    _require(isinstance(s, dict),
+             f"measured.sync must be a dict, got {type(s).__name__}")
+    for key in ("strategy", "dp", "measured_comm_s", "predicted_comm_s"):
+        _require(key in s, f"measured.sync missing {key!r}")
+    if not s.get("sync_overlap"):
+        return
+    for key in _SYNC_OVERLAP_REQUIRED:
+        _require(key in s, f"overlapped measured.sync missing {key!r}")
+    frac = s["overlap_fraction"]
+    _require(isinstance(frac, (int, float)) and 0.0 <= frac <= 1.0,
+             f"sync.overlap_fraction must be in [0, 1], got {frac!r}")
+    _require(int(s["n_buckets"]) >= 1,
+             f"sync.n_buckets must be >= 1, got {s['n_buckets']!r}")
+    _require(float(s["exposed_comm_time"])
+             <= float(s["measured_comm_s"]) + 1e-12,
+             "sync.exposed_comm_time exceeds the serial measured_comm_s")
 
 
 def _validate_tuning(t: Any):
@@ -142,3 +174,12 @@ def _validate_tuning(t: Any):
     for key in ("measured_step_s", "est_step_time_calibrated_s",
                 "est_step_time_uncalibrated_s"):
         _require(key in t["replan"], f"tuning.replan missing {key!r}")
+    if "overlap" in t and isinstance(t["overlap"], dict) \
+            and t["overlap"].get("measured"):
+        ov = t["overlap"]
+        _require("chosen_bucket_mb" in ov,
+                 "measured tuning.overlap missing 'chosen_bucket_mb'")
+        frac = ov.get("overlap_fraction")
+        _require(isinstance(frac, (int, float)) and 0.0 <= frac <= 1.0,
+                 f"tuning.overlap.overlap_fraction must be in [0, 1], "
+                 f"got {frac!r}")

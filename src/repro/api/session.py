@@ -35,7 +35,8 @@ from repro.configs.base import ModelConfig, get_config, get_shape
 from repro.core import amdahl, memory_model as mm, ps as ps_lib
 from repro.core.hardware import (ClusterSpec, MeshSpec, MULTI_POD, SINGLE_POD,
                                  get_cluster)
-from repro.core.planner import Plan, estimate_step_time, plan as plan_fn
+from repro.core.planner import (Plan, estimate_step_time, plan as plan_fn,
+                                r_o_from_terms)
 
 # Lemma 3.1 efficiency/speedup are reported for these device counts (the
 # paper's Fig. 4 sweep)
@@ -71,10 +72,25 @@ class Session:
         self._tuned: Optional["TuneResult"] = None
 
     # ------------------------------------------------------------------
+    def _overlap_kwargs(self) -> Dict[str, Any]:
+        """Overlap knobs every planner/pricing call shares: the spec's
+        ``sync_overlap``/``bucket_mb``, with the hideable window derated to
+        the *measured* overlap fraction when a calibration carries one."""
+        eff = 1.0
+        if self.calibration is not None \
+                and getattr(self.calibration, "bucket_mb", 0.0) > 0:
+            # bucket_mb > 0 marks a *ran* overlap sweep; its fraction is
+            # the measurement even when it measured 0.0 (no hiding
+            # achieved) — do not fall back to the ideal window then
+            eff = self.calibration.overlap_fraction
+        return dict(sync_overlap=self.spec.sync_overlap,
+                    bucket_mb=self.spec.bucket_mb, overlap_efficiency=eff)
+
     @property
     def resolved_plan(self) -> Plan:
         if self._plan is None:
-            self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec)
+            self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec,
+                                 **self._overlap_kwargs())
         return self._plan
 
     @property
@@ -199,8 +215,12 @@ class Session:
                     f"dp={spec.dp} but only {len(devs)} devices visible; set "
                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
                     f"{spec.dp}")
+            from repro.core.ps import DEFAULT_BUCKET_MB
+
             kw = dict(compression=spec.compress, devices=devs[:spec.dp],
-                      topology=self.cluster)
+                      topology=self.cluster,
+                      sync_overlap=spec.sync_overlap,
+                      bucket_mb=spec.bucket_mb or DEFAULT_BUCKET_MB)
             if spec.sync == "auto":
                 trainer = DataParallelTrainer.from_plan(
                     self.resolved_plan, self.cfg, run, opt, **kw)
@@ -337,11 +357,11 @@ class Session:
         if self.shape.kind in ("train", "prefill"):
             terms = estimate_step_time(self.cfg_full, self.shape,
                                        self.mesh_spec, p.remat,
-                                       max(p.microbatch, 1))
+                                       max(p.microbatch, 1),
+                                       **self._overlap_kwargs())
             out["step_time_terms"] = terms
-            r_o_model = (max(terms["collective"] + terms["memory"]
-                             - terms["compute"], 0.0)
-                         / max(terms["compute"], 1e-9))
+            # with overlap on, only the exposed collective share is overhead
+            r_o_model = r_o_from_terms(terms)
         # Lemma 3.1: efficiency/speedup curve from the best available R_O
         r_o = measured_r_o if measured_r_o is not None else r_o_model
         out["lemma31"] = {
@@ -376,6 +396,22 @@ class Session:
                 "masked": comm <= t_c,
                 "bottleneck_tier": p.bottleneck_tier,
             }
+            if p.sync_overlap:
+                # the overlapped refinement of the same lemma: comm that
+                # stays exposed after hiding under the backward pass
+                n_buckets = ps_lib.bucket_count(p.grad_bytes, p.bucket_mb)
+                eff = self._overlap_kwargs()["overlap_efficiency"]
+                exposed = ps_lib.overlap_exposed_comm(
+                    comm, (1.0 - ps_lib.FWD_FRACTION) * t_c, n_buckets,
+                    overlap_efficiency=eff)
+                out["lemma32"]["overlap"] = {
+                    "n_buckets": n_buckets,
+                    "bucket_mb": p.bucket_mb or ps_lib.DEFAULT_BUCKET_MB,
+                    "overlap_efficiency": eff,
+                    "exposed_comm_s": exposed,
+                    "hidden_comm_s": comm - exposed,
+                    "masked_after_overlap": exposed <= t_c,
+                }
             cluster = p.cluster
             if cluster is not None and not cluster.uniform:
                 # tier-aware PS placement: B_ps in-node vs cross-node

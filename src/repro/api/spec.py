@@ -48,6 +48,10 @@ class JobSpec:
     dp: int = 0                   # >0: explicit data-parallel trainer on dp devices
     sync: str = "auto"            # gradient-sync schedule, or planner-resolved
     compress: str = "none"        # gradient compression
+    sync_overlap: bool = False    # bucketed comm/compute overlap (trainer +
+                                  # overlap-aware cost model)
+    bucket_mb: float = 0.0        # sync-bucket size target [MiB]; 0 = the
+                                  # shared default (core.ps.DEFAULT_BUCKET_MB)
     ckpt_dir: str = ""
     ckpt_every: int = 0
     log_every: int = 10
@@ -85,6 +89,8 @@ class JobSpec:
                 raise ValueError(f"{name} must be > 0")
         if self.dp < 0:
             raise ValueError("dp must be >= 0 (0 = single-process loop)")
+        if self.bucket_mb < 0:
+            raise ValueError("bucket_mb must be >= 0 (0 = default bucket size)")
         if self.dp and self.batch % self.dp:
             raise ValueError(f"batch {self.batch} not divisible by dp={self.dp}")
 

@@ -203,6 +203,67 @@ def measure_train_steps(cfg: ModelConfig, *, batch: int, seq: int,
     return out
 
 
+# default bucket-size candidates for the overlap sweep [MiB]; callers with
+# tiny (test-scale) gradients pass their own
+DEFAULT_OVERLAP_BUCKET_MBS = (1.0, 4.0, 16.0)
+
+
+def tune_overlap(cfg: ModelConfig, *, batch: int, seq: int, dp: int,
+                 steps: int = 8, seed: int = 0,
+                 bucket_mbs: Tuple[float, ...] = DEFAULT_OVERLAP_BUCKET_MBS,
+                 topology: Optional[ClusterSpec] = None) -> Dict[str, Any]:
+    """Measure the achieved comm/compute overlap and its bucket-size sweet
+    spot: one short overlapped trainer burst per candidate ``bucket_mb``,
+    chosen on fused-step wall clock.  The winner's measured
+    ``overlap_fraction`` calibrates the cost model's hideable window
+    (:func:`repro.core.ps.overlap_exposed_comm`) the same way the measured
+    ``effective_link_bw`` calibrates Lemma 3.2's bandwidth."""
+    import jax
+
+    from repro.distributed.trainer import DataParallelTrainer
+    from repro.models.blocks import RunConfig
+    from repro.optim.adamw import OptConfig
+
+    devs = jax.devices()
+    if dp < 2 or len(devs) < dp:
+        return {"measured": False,
+                "note": f"needs dp >= 2 visible devices (dp={dp}, "
+                        f"visible={len(devs)})"}
+    run = RunConfig(attn_impl="auto", remat="none")
+    steps = max(steps, DataParallelTrainer.N_CALIB_STEPS + 3)
+    candidates: Dict[str, Dict[str, float]] = {}
+    best_mb, best_wall = 0.0, math.inf
+    for mb in bucket_mbs:
+        opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=steps)
+        tr = DataParallelTrainer(cfg, run, opt, strategy="all_reduce",
+                                 devices=devs[:dp], topology=topology,
+                                 sync_overlap=True, bucket_mb=mb)
+        tr.train(batch=batch, seq=seq, steps=steps, seed=seed, log_every=0)
+        rep = tr.report()
+        wall = rep.overlapped_step_s or math.inf
+        candidates[f"{mb:g}"] = {
+            "bucket_mb": mb,
+            "n_buckets": rep.n_buckets,
+            "overlap_fraction": rep.overlap_fraction,
+            "exposed_comm_s": rep.exposed_comm_time,
+            "serial_comm_s": rep.measured_comm_s,
+            "fused_step_s": rep.overlapped_step_s,
+        }
+        if wall < best_wall:
+            best_mb, best_wall = mb, wall
+    chosen = candidates.get(f"{best_mb:g}", {})
+    return {
+        "measured": True,
+        "dp": dp,
+        "steps": steps,
+        "candidates": candidates,
+        "chosen_bucket_mb": best_mb,
+        "overlap_fraction": float(chosen.get("overlap_fraction", 0.0)),
+        "exposed_comm_s": float(chosen.get("exposed_comm_s", 0.0)),
+        "serial_comm_s": float(chosen.get("serial_comm_s", 0.0)),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Calibration — the measured overlay on Chip/ClusterSpec
 # ---------------------------------------------------------------------------
@@ -226,6 +287,13 @@ class Calibration:
     matmul_flops: float = 0.0       # FLOP/s, microkernel ceiling
     hbm_bw: float = 0.0             # bytes/s, triad microkernel
     link_bw: float = 0.0            # bytes/s per worker (0 = unmeasured)
+    # achieved comm/compute overlap (SyncReport.overlap_fraction of the
+    # best measured bucket size): derates the overlap model's hideable
+    # window the same way link_bw re-prices Lemma 3.2.  ``bucket_mb > 0``
+    # marks that the sweep actually ran — a fraction of 0.0 with a set
+    # bucket_mb is a real measurement (no hiding achieved), not "unknown"
+    overlap_fraction: float = 0.0
+    bucket_mb: float = 0.0          # measured bucket-size sweet spot [MiB]
     arch: str = ""                  # executed config the wall clock belongs to
     measured: Dict[str, float] = field(default_factory=dict)
     created: str = ""
@@ -361,6 +429,9 @@ class TuneResult:
     replan: Dict[str, Any]
     tuned_plan: Plan
     cache_path: str = ""
+    # the measured comm/compute-overlap sweep (tune_overlap): bucket-size
+    # candidates, the sweet spot, and the achieved overlap_fraction
+    overlap: Dict[str, Any] = field(default_factory=dict)
 
     @property
     def chosen_minibatch(self) -> int:
@@ -395,6 +466,7 @@ class TuneResult:
             "measured": self.measured,
             "replan": self.replan,
             "cache_path": self.cache_path,
+            "overlap": self.overlap,
         }
 
 
@@ -436,7 +508,9 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
              shape: ShapeConfig, mesh: MeshSpec, *,
              batch: int, seq: int, steps: int = 3, dp: int = 0,
              seed: int = 0, cache_path: str = "", use_cache: bool = True,
-             bench_seq: int = 128, repeats: int = 2) -> TuneResult:
+             bench_seq: int = 128, repeats: int = 2,
+             overlap_bucket_mbs: Tuple[float, ...] = DEFAULT_OVERLAP_BUCKET_MBS
+             ) -> TuneResult:
     """Run the whole closed loop once and return the :class:`TuneResult`.
 
     ``cfg_exec`` is what actually executes (the reduced member on this
@@ -459,9 +533,14 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
     cal = cached_calibration(cache_path, key) if (cache_path and use_cache) \
         else None
     measured: Dict[str, Any]
+    overlap: Dict[str, Any] = {}
     if cal is not None:
         measured = {"from_cache": True, "cache_key": key,
                     **{k: v for k, v in cal.measured.items()}}
+        if cal.bucket_mb > 0:  # the sweep ran (a measured 0.0 fraction counts)
+            overlap = {"measured": True, "from_cache": True,
+                       "chosen_bucket_mb": cal.bucket_mb,
+                       "overlap_fraction": cal.overlap_fraction}
     else:
         measured = measure_train_steps(cfg_exec, batch=batch, seq=seq,
                                        steps=steps, dp=dp, seed=seed,
@@ -470,6 +549,16 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
         cal = fit_calibration(cfg_exec, batch=batch, seq=seq,
                               measured=measured, micro=micro,
                               backend=backend, cluster_name=cluster_name)
+        # achieved comm/compute overlap + bucket sweet spot, calibrated
+        # like the effective link bandwidth (dp >= 2 only: overlap needs
+        # a data axis to hide anything under)
+        overlap = tune_overlap(cfg_exec, batch=batch, seq=seq, dp=dp,
+                               seed=seed, bucket_mbs=overlap_bucket_mbs,
+                               topology=mesh.topology)
+        if overlap.get("measured"):
+            cal = replace(cal,
+                          overlap_fraction=float(overlap["overlap_fraction"]),
+                          bucket_mb=float(overlap["chosen_bucket_mb"]))
         if cache_path:
             save_calibration(cache_path, cal)
 
@@ -523,4 +612,5 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
     return TuneResult(
         backend=backend, cluster=cluster_name, minibatch=minibatch,
         kernels=kernels, conv_alg=conv, calibration=cal, measured=measured,
-        replan=replan, tuned_plan=tuned_plan, cache_path=str(cache_path))
+        replan=replan, tuned_plan=tuned_plan, cache_path=str(cache_path),
+        overlap=overlap)

@@ -49,6 +49,13 @@ class Plan:
     # True when the mesh carried measured (autotune-calibrated) constants
     # instead of datasheet numbers — see repro.core.autotune.Calibration
     calibrated: bool = False
+    # bucketed comm/compute overlap (repro.distributed.overlap): whether the
+    # plan was priced with sync hidden under the backward pass, the bucket
+    # size target [MiB] (0 = the shared default), and — when a trainer or
+    # test attached one — the serialized leaf-level BucketPlan dict
+    sync_overlap: bool = False
+    bucket_mb: float = 0.0
+    bucket_plan: Optional[Dict] = None
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
@@ -57,9 +64,11 @@ class Plan:
 
     def to_job_kwargs(self) -> Dict:
         """Every runtime knob a Session/launcher adopts from this plan:
-        the RunConfig knobs plus optimizer kind and the sync schedule."""
+        the RunConfig knobs plus optimizer kind, the sync schedule, and the
+        overlap knobs."""
         return dict(self.run_config_kwargs(), opt_kind=self.opt_kind,
-                    sync=self.sync_schedule)
+                    sync=self.sync_schedule, sync_overlap=self.sync_overlap,
+                    bucket_mb=self.bucket_mb)
 
     # -- topology view -----------------------------------------------------
     @property
@@ -175,6 +184,16 @@ def _dp_tiers(mesh: MeshSpec) -> Tuple[Tier, ...]:
         return (Tier(c.bottleneck_tier, mesh.dp, c.min_bw),)
 
 
+def r_o_from_terms(terms: Dict[str, float]) -> float:
+    """Lemma 3.1's overhead ratio R_O from the roofline terms — the one
+    place the accounting lives (plan_train and Session._predicted both
+    call it): only the *effective* (post-overlap) collective share counts
+    as overhead on top of compute."""
+    return (max(terms["collective_effective"] + terms["memory"]
+                - terms["compute"], 0.0)
+            / max(terms["compute"], 1e-9))
+
+
 def grad_sync_time(s_p: float, dp_tiers: Tuple[Tier, ...]) -> Tuple[float, str]:
     """Cheapest gradient-sync comm time for a payload of ``s_p`` bytes per
     worker over the tiered data axis, and the winning schedule — one call
@@ -190,7 +209,18 @@ def grad_sync_time(s_p: float, dp_tiers: Tuple[Tier, ...]) -> Tuple[float, str]:
 
 
 def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
-                       remat: str, microbatch: int) -> Dict[str, float]:
+                       remat: str, microbatch: int, *,
+                       sync_overlap: bool = False, bucket_mb: float = 0.0,
+                       overlap_efficiency: float = 1.0) -> Dict[str, float]:
+    """Napkin roofline terms [s].  With ``sync_overlap`` the gradient-sync
+    collective is priced through the bucketed-overlap model
+    (:func:`repro.core.ps.overlap_exposed_comm`): only the comm that sticks
+    out past the backward pass counts against the step.  ``collective``
+    always reports the serial sum; ``collective_effective`` is what the
+    ``total`` uses and degrades to ``collective`` exactly when
+    ``sync_overlap`` is off (or the payload yields a single bucket).
+    ``overlap_efficiency`` derates the hideable window to a *measured*
+    overlap fraction (autotune calibration)."""
     flops = train_flops_per_step(cfg, shape, remat) / mesh.chips
     t_compute = flops / mesh.chip.peak_flops
     # memory term: params read per microbatch pass + activations traffic
@@ -205,14 +235,28 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     # the innermost (fastest) tier, where TP ranks are packed
     cluster = mesh.cluster
     tiers = _dp_tiers(mesh)
-    t_grad, _ = grad_sync_time(4 * n / mesh.tp, tiers)
+    grad_bytes = 4 * n / mesh.tp
+    t_grad, _ = grad_sync_time(grad_bytes, tiers)
     tp_wire = (4 * cfg.num_layers * shape.global_batch * shape.seq_len
                * cfg.d_model * 2 / mesh.chips)
     t_tp = tp_wire / cluster.tiers[0].bw
     t_coll = t_grad + t_tp
+    # overlap: the exposed share of the grad sync under the bucketed model
+    t_grad_exposed, overlap_frac, n_buckets = t_grad, 0.0, 1
+    if sync_overlap and t_grad > 0:
+        n_buckets = ps.bucket_count(grad_bytes, bucket_mb)
+        t_bwd = (1.0 - ps.FWD_FRACTION) * t_compute
+        t_grad_exposed = ps.overlap_exposed_comm(
+            t_grad, t_bwd, n_buckets, overlap_efficiency=overlap_efficiency)
+        overlap_frac = (t_grad - t_grad_exposed) / t_grad
+    t_coll_eff = t_grad_exposed + t_tp
     return {"compute": t_compute, "memory": t_mem, "collective": t_coll,
             "collective_grad": t_grad, "collective_tp": t_tp,
-            "total": max(t_compute, t_mem, t_coll)}
+            "collective_grad_exposed": t_grad_exposed,
+            "collective_effective": t_coll_eff,
+            "overlap_fraction": overlap_frac,
+            "overlap_n_buckets": float(n_buckets),
+            "total": max(t_compute, t_mem, t_coll_eff)}
 
 
 # ---------------------------------------------------------------------------
@@ -221,7 +265,11 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
 
 
 def plan_train(cfg: ModelConfig, shape: ShapeConfig,
-               mesh: MeshSpec = SINGLE_POD) -> Plan:
+               mesh: MeshSpec = SINGLE_POD, *,
+               sync_overlap: bool = False, bucket_mb: float = 0.0,
+               overlap_efficiency: float = 1.0) -> Plan:
+    overlap_kw = dict(sync_overlap=sync_overlap, bucket_mb=bucket_mb,
+                      overlap_efficiency=overlap_efficiency)
     notes: List[str] = []
     if mesh.chip.calibrated:
         notes.append(f"priced on measured constants ({mesh.chip.name}: "
@@ -253,7 +301,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
                     seq_parallel=True, opt_kind=opt_kind)
                 if mem.total > 0.9 * hbm:
                     continue
-                t = estimate_step_time(cfg, shape, mesh, remat, mb)["total"]
+                t = estimate_step_time(cfg, shape, mesh, remat, mb,
+                                       **overlap_kw)["total"]
                 # dense attention has no flash overhead; tiny bonus at short S
                 if attn_impl == "dense" and shape.seq_len <= 4096:
                     t *= 0.98
@@ -278,11 +327,21 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
     if sync.bottleneck_tier:
         notes.append(f"bottleneck tier: {sync.bottleneck_tier}")
 
-    # Lemma 3.1: overhead ratio from the non-compute roofline terms
-    terms = estimate_step_time(cfg, shape, mesh, remat, mb)
-    r_o = (max(terms["collective"] + terms["memory"] - terms["compute"], 0.0)
-           / max(terms["compute"], 1e-9))
+    # Lemma 3.1: overhead ratio from the non-compute roofline terms — with
+    # overlap on, only the *exposed* collective share counts as overhead
+    terms = estimate_step_time(cfg, shape, mesh, remat, mb, **overlap_kw)
+    r_o = r_o_from_terms(terms)
     eff = amdahl.efficiency(mesh.chips, r_o / mesh.chips)  # R_O already aggregate
+    if sync_overlap:
+        exposed = terms["collective_grad_exposed"]
+        serial = terms["collective_grad"]
+        bound = ("comm-bound" if exposed + terms["collective_tp"]
+                 > max(terms["compute"], terms["memory"]) else "compute-bound")
+        notes.append(
+            f"overlap: {int(terms['overlap_n_buckets'])} buckets hide "
+            f"{terms['overlap_fraction']:.0%} of grad sync "
+            f"({serial:.3g}s -> {exposed:.3g}s exposed); {bound} after "
+            "overlap")
     return Plan(
         arch=cfg.name, shape=shape.name, mesh=(mesh.dp, mesh.tp), fsdp=fsdp,
         microbatch=mb, attn_impl=attn_impl, remat=remat, seq_parallel=True,
@@ -291,7 +350,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp,
         topology=mesh.cluster.to_dict(),
         bottleneck_tier=sync.bottleneck_tier,
-        calibrated=mesh.chip.calibrated, notes=notes,
+        calibrated=mesh.chip.calibrated,
+        sync_overlap=sync_overlap, bucket_mb=bucket_mb, notes=notes,
     )
 
 
@@ -321,7 +381,11 @@ def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
     )
 
 
-def plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec = SINGLE_POD) -> Plan:
+def plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec = SINGLE_POD, *,
+         sync_overlap: bool = False, bucket_mb: float = 0.0,
+         overlap_efficiency: float = 1.0) -> Plan:
     if shape.kind == "train" or shape.kind == "prefill":
-        return plan_train(cfg, shape, mesh)
-    return plan_decode(cfg, shape, mesh)
+        return plan_train(cfg, shape, mesh, sync_overlap=sync_overlap,
+                          bucket_mb=bucket_mb,
+                          overlap_efficiency=overlap_efficiency)
+    return plan_decode(cfg, shape, mesh)  # decode has no gradient sync

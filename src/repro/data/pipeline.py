@@ -112,11 +112,15 @@ class PrefetchLoader:
                     (self.batch, self.cfg.num_image_tokens, self.cfg.d_model),
                     dtype=np.float32) * 0.02
             t_prep = time.perf_counter() - t0
-            try:
-                self.q.put((batch, t_load, t_prep), timeout=1.0)
-            except queue.Full:
-                if self._stop.is_set():
-                    return
+            # keep retrying the SAME batch: timing out used to silently drop
+            # it, which made the token stream depend on step wall-clock and
+            # broke same-seed run-to-run determinism
+            while not self._stop.is_set():
+                try:
+                    self.q.put((batch, t_load, t_prep), timeout=0.2)
+                    break
+                except queue.Full:
+                    continue
 
     # -- consumer (step 4) -------------------------------------------------
     def __iter__(self) -> Iterator:

@@ -14,6 +14,12 @@ the mesh data axis and measures what the lemma only predicts:
   instrumented training loop with a chosen strategy, times the sync phase
   separately from compute, and reports measured-vs-predicted Lemma 3.1/3.2
   numbers in a :class:`SyncReport`.
+- :mod:`repro.distributed.overlap` — bucketed comm/compute overlap:
+  :class:`BucketPlan` partitions the gradient pytree into size-targeted,
+  grad-availability-ordered sync buckets; ``DataParallelTrainer(
+  sync_overlap=True)`` executes them as dataflow-independent collective
+  chains inside one fused step and measures the achieved
+  ``overlap_fraction`` / ``exposed_comm_time``.
 
 Run anything here under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 so the data axis is real (8 simulated devices) rather than napkin math.
@@ -23,6 +29,9 @@ from repro.distributed.collectives import (  # noqa: F401
 )
 from repro.distributed.compression import (  # noqa: F401
     COMPRESSORS, Compressor, get_compressor,
+)
+from repro.distributed.overlap import (  # noqa: F401
+    BucketPlan, DEFAULT_BUCKET_MB, build_bucket_plan,
 )
 from repro.distributed.trainer import (  # noqa: F401
     DataParallelTrainer, SyncReport,

@@ -51,8 +51,15 @@ def _identity(grads, ef):
 
 
 def _bf16(grads, ef):
+    # reduce_precision, not an astype round-trip: XLA's excess-precision
+    # simplification may elide a f32->bf16->f32 convert pair depending on
+    # the surrounding program, which made the "compressed" payload
+    # silently full-precision in some jits (and broke the bucketed-overlap
+    # path's bit-equivalence with the serial path)
     out = jax.tree_util.tree_map(
-        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+        lambda g: jax.lax.reduce_precision(g.astype(jnp.float32),
+                                           exponent_bits=8, mantissa_bits=7),
+        grads)
     return out, ef
 
 

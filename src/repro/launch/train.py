@@ -35,6 +35,7 @@ def build_spec(args) -> JobSpec:
         batch=args.batch, seq=args.seq, lr=args.lr,
         use_planner=args.plan, dp=args.dp, sync=args.sync,
         compress=args.compress, topology=args.topology,
+        sync_overlap=args.overlap, bucket_mb=args.bucket_mb,
         tune=args.autotune, tune_cache=args.tune_cache,
         ckpt_dir=args.ckpt_dir,
         ckpt_every=50 if args.ckpt_dir else 0)
@@ -64,6 +65,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "planner's sync_schedule")
     ap.add_argument("--compress", default="none",
                     help="gradient compression: none|bf16|int8|topk")
+    ap.add_argument("--overlap", dest="overlap",
+                    action=argparse.BooleanOptionalAction, default=False,
+                    help="bucketed comm/compute overlap: hide gradient sync "
+                         "under the backward pass (repro.distributed.overlap)"
+                         " and price the plan with the overlap-aware model")
+    ap.add_argument("--bucket-mb", type=float, default=0.0,
+                    help="sync-bucket size target in MiB for --overlap "
+                         "(0 = default)")
     ap.add_argument("--topology", default="",
                     help="named cluster topology (repro.core.hardware."
                          "CLUSTERS, e.g. 2x4); empty = flat mesh")
@@ -104,6 +113,12 @@ def main():
     if "sync" in rep.measured:
         print("sync report:", json.dumps(rep.measured["sync"], indent=2,
                                          default=str))
+        s = rep.measured["sync"]
+        if s.get("sync_overlap"):
+            print(f"overlap: {s['n_buckets']} buckets hide "
+                  f"{s['overlap_fraction']:.0%} of sync "
+                  f"(exposed {s['exposed_comm_time']*1e3:.1f}ms of "
+                  f"{s['measured_comm_s']*1e3:.1f}ms serial)")
     m = rep.measured
     losses = m["losses"]
     print(f"loss {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}; "

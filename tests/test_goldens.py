@@ -1,0 +1,153 @@
+"""Schema golden tests — one canonical checked-in JSON per report kind.
+
+Schema drift used to be caught only incidentally (a benchmark failing
+validation somewhere downstream).  These goldens pin the contract: each
+canonical artifact must validate as-is, and *single-field mutations* —
+deleting any required key, or corrupting the schema id / kind / bounded
+overlap fields — must be rejected.  The mutation lists are derived from
+``repro.api.report``'s own requirement tables so they cannot drift from
+the validator."""
+import copy
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.api import Campaign, validate_report
+from repro.api.report import (_MEASURED_REQUIRED, _PLAN_REQUIRED,
+                              _PREDICTED_REQUIRED, _SPEC_REQUIRED,
+                              _SYNC_OVERLAP_REQUIRED, _TUNING_REQUIRED,
+                              KINDS, SCHEMA_ID)
+
+GOLDENS = Path(__file__).resolve().parent / "goldens"
+REPORT_GOLDENS = ("report_v1_plan.json", "report_v1_train.json",
+                  "tuning_v1.json")
+
+
+def _load(name):
+    return json.loads((GOLDENS / name).read_text())
+
+
+# ---------------------------------------------------------------------------
+# The canonical artifacts validate as-is
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", REPORT_GOLDENS)
+def test_golden_reports_validate(name):
+    d = _load(name)
+    validate_report(d)
+    assert d["schema"] == SCHEMA_ID and d["kind"] in KINDS
+
+
+def test_golden_campaign_validates():
+    camp = Campaign.from_json((GOLDENS / "campaign_v1.json").read_text())
+    assert len(camp) == 2
+    for rep in camp.reports:
+        validate_report(json.loads(rep.to_json()))
+
+
+def test_goldens_cover_the_overlap_fields():
+    """The checked-in artifacts exercise the PR's schema additions, not
+    just the seed schema."""
+    plan = _load("report_v1_plan.json")
+    assert plan["plan"]["sync_overlap"] is True
+    assert "overlap" in plan["predicted"]["lemma32"]
+    train = _load("report_v1_train.json")
+    sync = train["measured"]["sync"]
+    assert sync["sync_overlap"] and sync["n_buckets"] > 1
+    assert 0.0 <= sync["overlap_fraction"] <= 1.0
+    tune = _load("tuning_v1.json")
+    assert tune["measured"]["tuning"]["overlap"]["measured"] is True
+
+
+# ---------------------------------------------------------------------------
+# Single-field mutations are rejected
+# ---------------------------------------------------------------------------
+
+
+def _required_paths(d):
+    """(section, key) deletions that must each break validation, derived
+    from the validator's own requirement tables."""
+    paths = [(None, k) for k in ("schema", "kind", "spec", "plan",
+                                 "measured", "predicted")]
+    paths += [("spec", k) for k in _SPEC_REQUIRED]
+    paths += [("plan", k) for k in _PLAN_REQUIRED]
+    paths += [("predicted", k) for k in _PREDICTED_REQUIRED]
+    paths += [("measured", k) for k in _MEASURED_REQUIRED.get(d["kind"], ())]
+    return paths
+
+
+@pytest.mark.parametrize("name", REPORT_GOLDENS)
+def test_golden_rejects_required_key_deletions(name):
+    golden = _load(name)
+    for section, key in _required_paths(golden):
+        d = copy.deepcopy(golden)
+        if section is None:
+            d.pop(key)
+        else:
+            d[section].pop(key)
+        with pytest.raises(ValueError):
+            validate_report(d)
+
+
+@pytest.mark.parametrize("name", REPORT_GOLDENS)
+def test_golden_rejects_field_corruption(name):
+    golden = _load(name)
+    corruptions = [
+        lambda d: d.update(schema="repro.api/report/v0"),
+        lambda d: d.update(kind="vibes"),
+        lambda d: d.update(spec=[]),
+    ]
+    for corrupt in corruptions:
+        d = copy.deepcopy(golden)
+        corrupt(d)
+        with pytest.raises(ValueError):
+            validate_report(d)
+
+
+def test_golden_train_rejects_sync_overlap_mutations():
+    golden = _load("report_v1_train.json")
+    for key in _SYNC_OVERLAP_REQUIRED:
+        d = copy.deepcopy(golden)
+        d["measured"]["sync"].pop(key)
+        with pytest.raises(ValueError):
+            validate_report(d)
+    d = copy.deepcopy(golden)
+    d["measured"]["sync"]["overlap_fraction"] = 2.0
+    with pytest.raises(ValueError):
+        validate_report(d)
+    d = copy.deepcopy(golden)
+    d["measured"]["sync"]["exposed_comm_time"] = \
+        d["measured"]["sync"]["measured_comm_s"] * 10 + 1.0
+    with pytest.raises(ValueError):
+        validate_report(d)
+
+
+def test_golden_tuning_rejects_section_mutations():
+    golden = _load("tuning_v1.json")
+    for key in _TUNING_REQUIRED:
+        d = copy.deepcopy(golden)
+        d["measured"]["tuning"].pop(key)
+        with pytest.raises(ValueError):
+            validate_report(d)
+    d = copy.deepcopy(golden)
+    d["measured"]["tuning"]["schema"] = "repro.api/tuning/v0"
+    with pytest.raises(ValueError):
+        validate_report(d)
+    d = copy.deepcopy(golden)
+    d["measured"]["tuning"]["overlap"]["overlap_fraction"] = -0.5
+    with pytest.raises(ValueError):
+        validate_report(d)
+
+
+def test_golden_campaign_rejects_schema_corruption():
+    raw = json.loads((GOLDENS / "campaign_v1.json").read_text())
+    bad = copy.deepcopy(raw)
+    bad["schema"] = "repro.api/campaign/v0"
+    with pytest.raises(ValueError):
+        Campaign.from_dict(bad)
+    bad = copy.deepcopy(raw)
+    bad["reports"][0].pop("plan")
+    with pytest.raises(ValueError):
+        Campaign.from_dict(bad)

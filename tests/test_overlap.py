@@ -1,0 +1,430 @@
+"""Overlapped gradient synchronization (repro.distributed.overlap + the
+overlap-aware cost model): bucketing is a partition and survives Plan JSON,
+the overlapped execution path bit-matches the serial 3-phase trainer, the
+measured overlap stays in [0, 1] with exposed comm below serial comm, and
+``estimate_step_time(sync_overlap=True)`` never prices above the serial
+formula (degrading to it exactly when overlap is off)."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ps
+from repro.distributed.overlap import (BucketPlan, DEFAULT_BUCKET_MB,
+                                       bucket_leaves, build_bucket_plan,
+                                       leaf_sizes_bytes, mb_to_bytes,
+                                       unbucket_leaves)
+
+
+def _tree(sizes):
+    """A nested pytree with the given per-leaf element counts (np arrays:
+    build_bucket_plan only reads shapes)."""
+    leaves = [np.zeros((n,), np.float32) for n in sizes]
+    return {"a": leaves[0], "b": {"c": leaves[1:3], "d": leaves[3:]}} \
+        if len(sizes) > 3 else leaves
+
+
+# ---------------------------------------------------------------------------
+# BucketPlan: partition property + serialization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bucket_bytes", [1.0, 64.0, 4096.0, 1e9])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bucket_plan_is_partition(bucket_bytes, seed):
+    """Every leaf lands in exactly one bucket, buckets walk the flatten
+    order backwards (grad-availability order), and bucket/unbucket is the
+    identity."""
+    rng = np.random.default_rng(seed)
+    sizes = [int(n) for n in rng.integers(1, 2000, size=rng.integers(1, 24))]
+    tree = _tree(sizes)
+    plan = build_bucket_plan(tree, bucket_bytes)
+
+    flat = [i for b in plan.buckets for i in b]
+    assert sorted(flat) == list(range(plan.n_leaves))       # partition
+    assert flat == list(range(plan.n_leaves - 1, -1, -1))   # reverse order
+    assert plan.total_bytes == sum(plan.leaf_bytes) == sum(plan.sizes_bytes)
+    assert plan.leaf_bytes == leaf_sizes_bytes(tree)
+    # cap semantics: no bucket exceeds the cap unless a single leaf does
+    # on its own, and each bucket is maximal (the next bucket's first leaf
+    # would have pushed it past the cap)
+    for b, size in zip(plan.buckets, plan.sizes_bytes):
+        assert size <= plan.bucket_bytes or len(b) == 1
+    for (b, size), nxt in zip(zip(plan.buckets, plan.sizes_bytes),
+                              plan.buckets[1:]):
+        assert size + plan.leaf_bytes[nxt[0]] > plan.bucket_bytes
+    # the size-level model count is a lower bound on the leaf-level count
+    # when no single leaf overflows the cap on its own
+    if all(lb <= plan.bucket_bytes for lb in plan.leaf_bytes):
+        import math
+        assert plan.n_buckets >= max(
+            math.ceil(plan.total_bytes / plan.bucket_bytes), 1)
+
+    import jax
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    rt = unbucket_leaves(bucket_leaves(leaves, plan), plan)
+    assert all(a is b for a, b in zip(leaves, rt))          # order restored
+
+
+def test_bucket_plan_validation():
+    with pytest.raises(ValueError):
+        BucketPlan(bucket_bytes=64.0, buckets=((0, 1), (1, 2)),
+                   leaf_bytes=(4.0, 4.0, 4.0))  # leaf 1 twice
+    with pytest.raises(ValueError):
+        BucketPlan(bucket_bytes=64.0, buckets=((0,),),
+                   leaf_bytes=(4.0, 4.0))       # leaf 1 missing
+    with pytest.raises(ValueError):
+        BucketPlan(bucket_bytes=0.0, buckets=((0,),), leaf_bytes=(4.0,))
+    with pytest.raises(ValueError):
+        build_bucket_plan(_tree([4, 4]), 0.0)
+    plan = build_bucket_plan(_tree([10, 20, 30]), 64.0)
+    with pytest.raises(ValueError):
+        bucket_leaves([1, 2], plan)             # wrong leaf count
+    with pytest.raises(ValueError):
+        unbucket_leaves([[1]], plan)            # wrong bucket count
+
+
+def test_bucket_plan_order_stable_roundtrip_through_plan_json():
+    """The leaf-level BucketPlan survives a Plan JSON round trip with
+    bucket *order* intact (the grad-availability order is the schedule)."""
+    from repro.configs.base import get_config, get_shape
+    from repro.core.planner import Plan, plan_train
+
+    tree = _tree([100, 300, 50, 1200, 7, 900])
+    bp = build_bucket_plan(tree, 1000 * 4.0)
+    assert bp.n_buckets > 1
+
+    p = plan_train(get_config("granite-3-2b"), get_shape("train_4k"),
+                   sync_overlap=True, bucket_mb=2.0)
+    assert p.sync_overlap and p.bucket_mb == 2.0
+    p = dataclasses.replace(p, bucket_plan=bp.to_dict())
+    q = Plan.from_json(p.to_json())
+    assert q == p
+    back = BucketPlan.from_dict(q.bucket_plan)
+    assert back == bp
+    assert back.buckets == bp.buckets  # order-stable, not just set-equal
+    assert BucketPlan.from_json(bp.to_json()) == bp
+    # a serial plan round-trips its (default) overlap knobs too
+    s = plan_train(get_config("granite-3-2b"), get_shape("train_4k"))
+    assert not s.sync_overlap and s.bucket_plan is None
+    assert Plan.from_json(s.to_json()) == s
+
+
+# ---------------------------------------------------------------------------
+# Cost model: degradation, bounds, and the sweep-grid acceptance criterion
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_cost_model_degrades_to_serial():
+    t_comm, t_bwd = 0.3, 1.2
+    # single bucket / zero efficiency / zero backward: fully exposed
+    assert ps.overlap_exposed_comm(t_comm, t_bwd, 1) == t_comm
+    assert ps.overlap_exposed_comm(t_comm, t_bwd, 8,
+                                   overlap_efficiency=0.0) == t_comm
+    assert ps.overlap_exposed_comm(t_comm, 0.0, 8) == t_comm
+    assert ps.overlap_exposed_comm(0.0, t_bwd, 8) == 0.0
+    # more buckets -> monotonically less exposed comm
+    prev = t_comm + 1
+    for n in (1, 2, 4, 8, 64):
+        e = ps.overlap_exposed_comm(t_comm, t_bwd, n)
+        assert 0.0 <= e <= t_comm
+        assert e <= prev
+        prev = e
+    # the step-time form: serial equality at n=1, monotone improvement
+    serial = ps.overlap_step_time(0.4, t_bwd, t_comm, 1)
+    assert serial["total"] == pytest.approx(0.4 + t_bwd + t_comm)
+    assert serial["overlap_fraction"] == 0.0
+    over = ps.overlap_step_time(0.4, t_bwd, t_comm, 8)
+    assert over["total"] <= serial["total"]
+    assert 0.0 <= over["overlap_fraction"] <= 1.0
+    assert over["hidden_comm"] + over["exposed_comm"] == pytest.approx(t_comm)
+    # efficiency derating interpolates between the two
+    half = ps.overlap_step_time(0.4, t_bwd, t_comm, 8, overlap_efficiency=0.5)
+    assert over["total"] <= half["total"] <= serial["total"]
+
+
+def test_bucket_count():
+    assert ps.bucket_count(0.0, 4.0) == 1
+    assert ps.bucket_count(4 * 2**20, 4.0) == 1
+    assert ps.bucket_count(4 * 2**20 + 1, 4.0) == 2
+    assert ps.bucket_count(40 * 2**20, 4.0) == 10
+    # 0 falls back to the shared default
+    assert ps.bucket_count(ps.DEFAULT_BUCKET_MB * 2**20, 0.0) == 1
+    assert DEFAULT_BUCKET_MB == ps.DEFAULT_BUCKET_MB
+    assert mb_to_bytes(2.0) == 2 * 2**20
+
+
+def test_estimate_step_time_overlap_never_above_serial_on_sweep_grid():
+    """The acceptance criterion, checked over the same grid
+    ``benchmarks/sweep.py`` fans out (topologies x archs): overlap pricing
+    is never above serial, and with overlap off the terms degrade to the
+    serial formula exactly."""
+    from repro.configs.base import get_config, get_shape
+    from repro.core.hardware import MeshSpec, get_cluster
+    from repro.core.planner import estimate_step_time
+
+    shape = get_shape("train_4k")
+    for topo in ("flat8", "2x4", "4x4-ib", "pod"):
+        mesh = MeshSpec.from_cluster(get_cluster(topo))
+        for arch in ("granite-3-2b", "mamba2-780m"):
+            cfg = get_config(arch)
+            serial = estimate_step_time(cfg, shape, mesh, "block", 1)
+            over = estimate_step_time(cfg, shape, mesh, "block", 1,
+                                      sync_overlap=True)
+            assert over["total"] <= serial["total"], (topo, arch)
+            assert 0.0 <= over["overlap_fraction"] <= 1.0
+            assert over["collective_grad_exposed"] <= over["collective_grad"]
+            # serial: effective == serial sum, overlap fields inert
+            assert serial["collective_effective"] == serial["collective"]
+            assert serial["overlap_fraction"] == 0.0
+            assert serial["collective_grad_exposed"] == serial["collective_grad"]
+            # the serial keys are priced identically in both modes
+            for key in ("compute", "memory", "collective", "collective_grad",
+                        "collective_tp"):
+                assert over[key] == serial[key]
+
+
+def test_plan_train_overlap_knobs_and_note():
+    from repro.configs.base import get_config, get_shape
+    from repro.core.hardware import MeshSpec, get_cluster
+    from repro.core.planner import plan_train
+
+    mesh = MeshSpec.from_cluster(get_cluster("2pod-dcn"))
+    cfg, shape = get_config("granite-3-2b"), get_shape("train_4k")
+    serial = plan_train(cfg, shape, mesh)
+    over = plan_train(cfg, shape, mesh, sync_overlap=True)
+    assert over.sync_overlap and not serial.sync_overlap
+    assert over.est_step_time <= serial.est_step_time
+    assert over.efficiency >= serial.efficiency  # hidden comm shrinks R_O
+    assert any("overlap" in n and "bound after overlap" in n
+               for n in over.notes)
+    assert not any("bound after overlap" in n for n in serial.notes)
+    # resolve_sync & job kwargs carry the knobs
+    kw = over.to_job_kwargs()
+    assert kw["sync_overlap"] is True and "bucket_mb" in kw
+
+
+# ---------------------------------------------------------------------------
+# Execution: overlapped path vs the serial 3-phase path (multi-device)
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    from repro.configs.base import get_config
+
+    return get_config("granite-3-2b").reduced().replace(
+        vocab_size=256, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128)
+
+
+def _trainers(strategy, compression, multi_device, **overlap_kw):
+    from repro.distributed import DataParallelTrainer
+    from repro.models.blocks import RunConfig
+    from repro.optim.adamw import OptConfig
+
+    cfg = _tiny_cfg()
+    run = RunConfig(attn_impl="dense", remat="none")
+
+    def make(**kw):
+        return DataParallelTrainer(
+            cfg, run, OptConfig(lr=1e-3, warmup_steps=0, total_steps=8),
+            strategy=strategy, compression=compression,
+            devices=multi_device, **kw)
+
+    return make(), make(sync_overlap=True, **overlap_kw)
+
+
+def _run_steps(trainer, steps, batch=16, seq=32):
+    """Drive the trainer's step_fn directly on a deterministic batch
+    sequence (no loader): returns the final params pytree."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = trainer.cfg
+    params, state = trainer.init(0)
+    step = trainer.step_fn()
+    rng = np.random.default_rng(0)
+    for _ in range(steps):
+        toks = rng.integers(0, cfg.vocab_size, (batch, seq)).astype(np.int32)
+        b = {k: jax.device_put(jnp.asarray(toks),
+                               NamedSharding(trainer.mesh,
+                                             trainer._data_spec))
+             for k in ("tokens", "labels")}
+        params, state, _ = step(params, state, b)
+    return params
+
+
+@pytest.mark.parametrize("strategy", ["all_reduce", "reduce_scatter_all_gather",
+                                      "parameter_server", "hier_all_reduce"])
+def test_overlapped_numerics_bit_match_serial_all_strategies(
+        strategy, multi_device):
+    """Same seed, 4 steps (2 serial-bucketed calibration + 2 fused
+    overlapped): the overlapped trainer's parameters are BIT-identical to
+    the serial 3-phase trainer's for every sync strategy."""
+    import jax
+
+    serial, overlapped = _trainers(strategy, "none", multi_device,
+                                   bucket_mb=0.05)
+    p_serial = _run_steps(serial, 4)
+    p_overlap = _run_steps(overlapped, 4)
+    assert overlapped._bucket_plan.n_buckets > 1, "bucketing never engaged"
+    for a, b in zip(jax.tree_util.tree_leaves(p_serial),
+                    jax.tree_util.tree_leaves(p_overlap)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("compression", ["bf16", "int8", "topk"])
+def test_overlapped_numerics_bit_match_serial_compressors(
+        compression, multi_device):
+    """The same bit-match holds under every gradient compressor (incl. the
+    stateful error-feedback ones, whose EF state rides per bucket)."""
+    import jax
+
+    serial, overlapped = _trainers("all_reduce", compression, multi_device,
+                                   bucket_mb=0.05)
+    p_serial = _run_steps(serial, 4)
+    p_overlap = _run_steps(overlapped, 4)
+    for a, b in zip(jax.tree_util.tree_leaves(p_serial),
+                    jax.tree_util.tree_leaves(p_overlap)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_overlap_report_measures_hiding(multi_device):
+    """The acceptance measurement on a forced multi-device run: the
+    overlapped trainer's exposed comm is strictly below the serial comm,
+    the fraction is a true fraction, and the per-bucket decomposition is
+    self-consistent."""
+    from repro.models.blocks import RunConfig
+    from repro.optim.adamw import OptConfig
+    from repro.distributed import DataParallelTrainer
+
+    tr = DataParallelTrainer(
+        _tiny_cfg(), RunConfig(attn_impl="dense", remat="none"),
+        OptConfig(lr=1e-3, warmup_steps=0, total_steps=10),
+        strategy="all_reduce", devices=multi_device,
+        sync_overlap=True, bucket_mb=0.05)
+    tr.train(batch=16, seq=32, steps=10, log_every=0)
+    rep = tr.report()
+    assert rep.sync_overlap and rep.bucket_mb == 0.05
+    assert rep.n_buckets == tr._bucket_plan.n_buckets > 1
+    assert len(rep.per_bucket_comm_s) == rep.n_buckets
+    assert len(rep.bucket_sizes_bytes) == rep.n_buckets
+    assert sum(rep.bucket_sizes_bytes) == pytest.approx(rep.grad_bytes)
+    assert 0.0 <= rep.overlap_fraction <= 1.0
+    assert rep.measured_comm_s > 0
+    assert rep.exposed_comm_time < rep.measured_comm_s, \
+        "overlap hid nothing: exposed == serial comm"
+    assert rep.overlapped_step_s > 0
+    # the dict view (what lands in Report.measured["sync"]) carries it all
+    d = rep.as_dict()
+    for key in ("sync_overlap", "n_buckets", "overlap_fraction",
+                "exposed_comm_time", "per_bucket_comm_s"):
+        assert key in d
+
+
+def test_session_overlap_report_validates(multi_device):
+    """JobSpec(sync_overlap=True) end to end through Session.train: the
+    Report's measured.sync block passes the schema's overlap checks."""
+    from repro.api import JobSpec, Session, validate_report
+
+    spec = JobSpec(arch="granite-3-2b", steps=6, batch=8, seq=32, dp=4,
+                   sync="all_reduce", sync_overlap=True, bucket_mb=0.05,
+                   log_every=0)
+    assert JobSpec.from_json(spec.to_json()) == spec
+    rep = Session(spec, config=_tiny_cfg()).train()
+    d = json.loads(rep.to_json())
+    validate_report(d)
+    s = d["measured"]["sync"]
+    assert s["sync_overlap"] and s["n_buckets"] > 1
+    assert 0.0 <= s["overlap_fraction"] <= 1.0
+    assert d["plan"]["sync_overlap"] is True
+    assert "overlap" in d["predicted"]["lemma32"]
+
+
+def test_report_schema_rejects_bad_overlap_sync():
+    """Single-field mutations of an overlapped sync block must be
+    rejected."""
+    from repro.api import validate_report
+
+    def base():
+        return {
+            "schema": "repro.api/report/v1", "kind": "plan",
+            "spec": {k: 0 for k in ("arch", "shape", "reduced", "steps",
+                                    "batch", "seq", "seed")},
+            "plan": {k: 0 for k in ("arch", "mesh", "microbatch", "attn_impl",
+                                    "remat", "sync_schedule",
+                                    "est_step_time")},
+            "measured": {"sync": {
+                "strategy": "all_reduce", "dp": 8,
+                "measured_comm_s": 0.01, "predicted_comm_s": 0.01,
+                "sync_overlap": True, "n_buckets": 4,
+                "overlap_fraction": 0.5, "exposed_comm_time": 0.005,
+                "bucket_sizes_bytes": [256.0] * 4,
+                "per_bucket_comm_s": [0.0025] * 4,
+                "overlapped_step_s": 0.02,
+            }},
+            "predicted": {"lemma31": {}, "lemma32": {}},
+        }
+
+    validate_report(base())  # the unmutated block passes
+    mutations = [
+        lambda s: s.pop("overlap_fraction"),
+        lambda s: s.pop("n_buckets"),
+        lambda s: s.pop("exposed_comm_time"),
+        lambda s: s.update(overlap_fraction=1.5),
+        lambda s: s.update(overlap_fraction=-0.1),
+        lambda s: s.update(n_buckets=0),
+        lambda s: s.update(exposed_comm_time=0.02),  # > measured_comm_s
+        lambda s: s.pop("strategy"),
+    ]
+    for mutate in mutations:
+        d = base()
+        mutate(d["measured"]["sync"])
+        with pytest.raises(ValueError):
+            validate_report(d)
+    # a serial sync block needs no overlap fields
+    d = base()
+    for key in ("sync_overlap", "n_buckets", "overlap_fraction",
+                "exposed_comm_time"):
+        d["measured"]["sync"].pop(key)
+    validate_report(d)
+
+
+def test_calibrated_zero_overlap_is_honored():
+    """A calibration whose overlap sweep *measured* 0.0 hiding must derate
+    the window to zero (serial pricing), not fall back to the ideal 1.0 —
+    bucket_mb > 0 marks 'the sweep ran'."""
+    from repro.api import JobSpec, Session
+    from repro.core.autotune import Calibration
+
+    spec = JobSpec(arch="granite-3-2b", steps=2, sync_overlap=True)
+    measured_zero = Calibration(backend="cpu", cluster="flat8",
+                                achieved_flops=1e12,
+                                overlap_fraction=0.0, bucket_mb=4.0)
+    unmeasured = Calibration(backend="cpu", cluster="flat8",
+                             achieved_flops=1e12)
+    sess_zero = Session(spec, calibration=measured_zero)
+    sess_ideal = Session(spec, calibration=unmeasured)
+    assert sess_zero._overlap_kwargs()["overlap_efficiency"] == 0.0
+    assert sess_ideal._overlap_kwargs()["overlap_efficiency"] == 1.0
+    # measured-zero overlap ⇒ the lemma32 overlap block exposes ALL comm
+    l32 = sess_zero.plan().predicted["lemma32"]["overlap"]
+    assert l32["exposed_comm_s"] == pytest.approx(
+        sess_zero.plan().predicted["lemma32"]["predicted_comm_s"])
+    assert l32["hidden_comm_s"] == pytest.approx(0.0)
+
+
+def test_train_launcher_overlap_flags():
+    from repro.launch.train import build_parser, build_spec
+
+    ap = build_parser()
+    spec = build_spec(ap.parse_args(["--arch", "granite-3-2b"]))
+    assert not spec.sync_overlap and spec.bucket_mb == 0.0
+    spec = build_spec(ap.parse_args(
+        ["--arch", "granite-3-2b", "--overlap", "--bucket-mb", "2.5"]))
+    assert spec.sync_overlap and spec.bucket_mb == 2.5
+    spec = build_spec(ap.parse_args(
+        ["--arch", "granite-3-2b", "--no-overlap"]))
+    assert not spec.sync_overlap

@@ -1,0 +1,59 @@
+"""tier-1 keeps itself honest: the budget guard's static marker scan runs
+*inside* the fast tier, so a new subprocess test that forgets its ``slow``
+marker fails the suite immediately (the wall-clock half of the guard runs
+in CI on the junitxml report — see tools/test_budget.py and ci.yml)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import test_budget  # noqa: E402  (tools/test_budget.py)
+
+
+def test_no_unmarked_subprocess_tests():
+    violations = test_budget.check_markers()
+    assert not violations, "\n".join(violations)
+
+
+def test_marker_scan_catches_violations(tmp_path, monkeypatch):
+    """The scanner itself works: an unmarked run_sub test is flagged, a
+    slow-marked or module-slow one is not."""
+    tdir = tmp_path / "tests"
+    tdir.mkdir()
+    (tdir / "test_bad.py").write_text(
+        "from conftest import run_sub\n"
+        "def test_spawns():\n    run_sub('print(1)')\n")
+    (tdir / "test_ok.py").write_text(
+        "import pytest\nfrom conftest import run_sub\n"
+        "@pytest.mark.slow\ndef test_spawns():\n    run_sub('print(1)')\n"
+        "def test_pure():\n    assert 1\n")
+    (tdir / "test_module_slow.py").write_text(
+        "import pytest, subprocess\npytestmark = pytest.mark.slow\n"
+        "def test_spawns():\n    subprocess.run(['true'])\n")
+    # import-alias evasions are caught too
+    (tdir / "test_alias.py").write_text(
+        "import subprocess as sp\n"
+        "def test_spawns():\n    sp.run(['true'])\n")
+    (tdir / "test_from_import.py").write_text(
+        "from subprocess import run\n"
+        "def test_spawns():\n    run(['true'])\n")
+    monkeypatch.setattr(test_budget, "TESTS_DIR", tdir)
+    monkeypatch.setattr(test_budget, "ALLOW_FAST_SUBPROCESS", set())
+    violations = "\n".join(test_budget.check_markers())
+    assert "test_bad.py::test_spawns" in violations
+    assert "test_alias.py::test_spawns" in violations
+    assert "test_from_import.py::test_spawns" in violations
+    assert "test_ok.py" not in violations
+    assert "test_module_slow.py" not in violations
+
+
+def test_budget_check_reads_junit(tmp_path):
+    junit = tmp_path / "tier1.xml"
+    junit.write_text(
+        '<testsuites><testsuite>'
+        '<testcase classname="tests.test_a" name="test_x" time="1.5"/>'
+        '<testcase classname="tests.test_a" name="test_y" time="2.0"/>'
+        '</testsuite></testsuites>')
+    assert test_budget.check_budget(junit, budget_s=10.0) == []
+    over = test_budget.check_budget(junit, budget_s=3.0)
+    assert len(over) == 1 and "3.5s" in over[0]
