@@ -68,11 +68,18 @@ def run(csv_rows):
     meta.update(benchmark="fig2_throughput_vs_batch",
                 run_config={"remat": "none",
                             "attn_impl": "per-point (see measured.points)"})
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    for p in points:
+        reg.inc("bench/points")
+        reg.observe("bench/tokens_per_s", p["tokens_per_s"])
     rep = Report(kind="bench", spec=spec.to_dict(),
                  plan=sess.resolved_plan.to_dict(),
                  measured={"tokens_per_s": max(p["tokens_per_s"]
                                                for p in points),
                            "points": points,
-                           "bound_bytes": BOUND_BYTES},
+                           "bound_bytes": BOUND_BYTES,
+                           "metrics": reg.section()},
                  predicted=sess.plan().predicted, meta=meta)
     print(f"wrote {rep.validate().save('results/fig2_report.json')}")

@@ -50,6 +50,14 @@ def run(csv_rows):
             speedups[str(g)] = {"estimated": est, "actual_sim": act}
         measured = res.summary()
         measured["speedup"] = speedups
+        from repro.obs import MetricsRegistry
+
+        reg = MetricsRegistry()
+        reg.set_gauge("bench/r_o", r_o)
+        for st in res.step_times:
+            reg.inc("bench/steps")
+            reg.observe("bench/compute_s", st.compute)
+        measured["metrics"] = reg.section()
         meta = sess.report_meta()
         meta.update(benchmark="fig4_speedup",
                     run_config={"attn_impl": run_cfg.attn_impl,

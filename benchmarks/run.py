@@ -12,7 +12,7 @@ import sys
 import time
 
 ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "sweep",
-       "autotune", "ilp", "dryrun", "roofline")
+       "autotune", "ilp", "dryrun", "roofline", "telemetry")
 
 
 def main() -> None:
@@ -24,7 +24,7 @@ def main() -> None:
     which = [w.strip() for w in args.only.split(",") if w.strip()]
     if args.fast:
         which = [w for w in which if w not in ("fig2", "fig3", "fig4", "sync",
-                                               "autotune")]
+                                               "autotune", "telemetry")]
 
     csv_rows = []
     t0 = time.time()
@@ -51,6 +51,8 @@ def main() -> None:
             from benchmarks import dryrun_summary as m
         elif name == "roofline":
             from benchmarks import roofline as m
+        elif name == "telemetry":
+            from benchmarks import telemetry as m
         else:
             print(f"unknown benchmark {name!r}", file=sys.stderr)
             continue

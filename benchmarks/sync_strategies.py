@@ -165,6 +165,20 @@ def _bench(args) -> dict:
                                                          DEFAULT_LINK_BW)
             for name in STRATEGIES},
     }
+    # the bench artifact's metrics/v1 section: grid-level distributions of
+    # the measured comm/compute phases (validate_report requires it)
+    from repro.obs import MetricsRegistry
+
+    reg = MetricsRegistry()
+    reg.set_gauge("bench/baseline_tokens_per_s", base.tokens_per_s)
+    reg.set_gauge("bench/devices", dp)
+    for r_ in measured["runs"]:
+        reg.inc("bench/runs")
+        reg.observe("bench/measured_comm_s", r_["measured_comm_s"])
+        reg.observe("bench/measured_compute_s", r_["measured_compute_s"])
+        reg.observe("bench/tokens_per_s", r_["tokens_per_s"])
+    measured["metrics"] = reg.section()
+
     meta = sess.report_meta()
     meta.update(benchmark="sync_strategies", quick=bool(args.quick),
                 overlap=bool(args.overlap),

@@ -25,6 +25,8 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, Union
 
+from repro.obs.metrics import METRICS_SCHEMA_ID, validate_metrics
+
 SCHEMA_ID = "repro.api/report/v1"
 # the autotuner's section under measured["tuning"] (Session.tune emits it;
 # repro.core.autotune.TUNING_SCHEMA_ID mirrors this literal — layering keeps
@@ -36,9 +38,10 @@ KINDS = ("plan", "dryrun", "train", "serve", "bench", "tune")
 # measurement comparable across entry points (bench artifacts range from a
 # full trajectory to a throughput sweep, so only the headline is required)
 _MEASURED_REQUIRED = {
-    "train": ("steps", "loss_last", "tokens_per_s", "r_o", "step_times_mean"),
-    "bench": ("tokens_per_s",),
-    "serve": ("requests", "tokens_per_s"),
+    "train": ("steps", "loss_last", "tokens_per_s", "r_o", "step_times_mean",
+              "metrics"),
+    "bench": ("tokens_per_s", "metrics"),
+    "serve": ("requests", "tokens_per_s", "metrics"),
     "tune": ("tuning",),
 }
 # any report carrying a tuning section (kind "tune", or a train run that
@@ -123,6 +126,9 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
         _validate_tuning(d["measured"]["tuning"])
     if "sync" in d["measured"]:
         _validate_sync(d["measured"]["sync"])
+    if "metrics" in d["measured"]:
+        # any report may carry telemetry; delegate to repro.obs.metrics
+        validate_metrics(d["measured"]["metrics"])
     return d
 
 

@@ -21,7 +21,8 @@ from __future__ import annotations
 import itertools
 import math
 import time
-from typing import Any, Dict, List, Optional, Sequence, TYPE_CHECKING
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 if TYPE_CHECKING:  # import-light: autotune pulls kernels/jax lazily anyway
     from repro.core.autotune import Calibration, TuneResult
@@ -31,6 +32,7 @@ import numpy as np
 from repro.api.campaign import Campaign
 from repro.api.report import Report
 from repro.api.spec import JobSpec
+from repro.obs import MetricsRegistry, Tracer
 from repro.configs.base import ModelConfig, get_config, get_shape
 from repro.core import amdahl, memory_model as mm, ps as ps_lib
 from repro.core.hardware import (ClusterSpec, MeshSpec, MULTI_POD, SINGLE_POD,
@@ -70,6 +72,30 @@ class Session:
         self._config_override = config is not None
         self._plan: Optional[Plan] = None
         self._tuned: Optional["TuneResult"] = None
+        # telemetry of the last measured run (repro.obs) — set by
+        # train/bench/serve/tune, inspectable after the Report comes back
+        self.last_tracer: Optional[Tracer] = None
+        self.last_metrics: Optional[MetricsRegistry] = None
+
+    # ------------------------------------------------------------------
+    def _make_obs(self) -> Tuple[Tracer, MetricsRegistry]:
+        """Fresh telemetry for one measured run.  The tracer is always
+        enabled inside a Session: span wall clocks ARE the measurements
+        (StepTimes / GenResult), and the ``metrics/v1`` section every
+        measured Report must carry is rendered from the registry."""
+        tracer = Tracer(enabled=True)
+        metrics = MetricsRegistry()
+        self.last_tracer, self.last_metrics = tracer, metrics
+        return tracer, metrics
+
+    def _save_trace(self, kind: str, tracer: Tracer) -> Dict[str, Any]:
+        """Chrome-trace export to ``spec.trace_dir`` (when set); returns the
+        meta fragment recording where it landed."""
+        if not self.spec.trace_dir:
+            return {}
+        path = Path(self.spec.trace_dir) / f"trace_{kind}.json"
+        tracer.save(path)
+        return {"trace_file": str(path), "trace_events": len(tracer)}
 
     # ------------------------------------------------------------------
     def _overlap_kwargs(self) -> Dict[str, Any]:
@@ -101,10 +127,12 @@ class Session:
             from repro.core import autotune
 
             spec = self.spec
+            tracer, metrics = self._make_obs()
             self._tuned = autotune.autotune(
                 self.cfg, self.cfg_full, self.shape, self.mesh_spec,
                 batch=spec.batch, seq=spec.seq, steps=spec.tune_steps,
-                dp=spec.dp, seed=spec.seed, cache_path=spec.tune_cache)
+                dp=spec.dp, seed=spec.seed, cache_path=spec.tune_cache,
+                tracer=tracer, metrics=metrics)
         return self._tuned
 
     def build_run_opt(self):
@@ -183,7 +211,12 @@ class Session:
         res = self.tuned
         measured: Dict[str, Any] = dict(res.measured)
         measured["tuning"] = res.section()
-        return self._report("tune", measured, self._predicted())
+        if self.last_metrics is not None:
+            measured["metrics"] = self.last_metrics.section()
+        meta_extra = (self._save_trace("tune", self.last_tracer)
+                      if self.last_tracer is not None else {})
+        return self._report("tune", measured, self._predicted(),
+                            meta_extra=meta_extra)
 
     def train(self) -> Report:
         """Run the training loop (single-process GSPMD, or the explicit
@@ -198,7 +231,8 @@ class Session:
 
     def _run_train(self, kind: str) -> Report:
         spec = self.spec
-        run, opt = self.build_run_opt()
+        run, opt = self.build_run_opt()  # may touch self.tuned (own obs)
+        tracer, metrics = self._make_obs()
         loop_kw = dict(batch=spec.batch, seq=spec.seq, steps=spec.steps,
                        seed=spec.seed, log_every=spec.log_every,
                        ckpt_dir=spec.ckpt_dir or None,
@@ -220,7 +254,8 @@ class Session:
             kw = dict(compression=spec.compress, devices=devs[:spec.dp],
                       topology=self.cluster,
                       sync_overlap=spec.sync_overlap,
-                      bucket_mb=spec.bucket_mb or DEFAULT_BUCKET_MB)
+                      bucket_mb=spec.bucket_mb or DEFAULT_BUCKET_MB,
+                      tracer=tracer, metrics=metrics)
             if spec.sync == "auto":
                 trainer = DataParallelTrainer.from_plan(
                     self.resolved_plan, self.cfg, run, opt, **kw)
@@ -232,14 +267,27 @@ class Session:
         else:
             from repro.train.loop import train as train_loop
 
-            res = train_loop(self.cfg, run, opt, **loop_kw)
+            res = train_loop(self.cfg, run, opt, tracer=tracer, **loop_kw)
+            # the single-process loop has no phase-publishing step_fn, so
+            # the session publishes its StepTimes into the registry
+            for t in res.step_times:
+                metrics.inc("train/steps")
+                metrics.observe("train/compute_s", t.compute)
+                metrics.observe("train/dist_update_s", t.dist_update)
+                metrics.observe("train/param_update_s", t.param_update)
+                metrics.observe("train/step_s",
+                                t.compute + t.dist_update + t.param_update)
         measured = res.summary()
+        metrics.set_gauge("train/tokens_per_s", measured["tokens_per_s"])
+        metrics.set_gauge("train/r_o", measured["r_o"])
         if sync_rep is not None:
             measured["sync"] = sync_rep.as_dict()
         if spec.tune:  # the run adopted tuned knobs: record what they were
             measured["tuning"] = self.tuned.section()
+        measured["metrics"] = metrics.section()
         predicted = self._predicted(measured_r_o=measured["r_o"])
-        return self._report(kind, measured, predicted)
+        return self._report(kind, measured, predicted,
+                            meta_extra=self._save_trace(kind, tracer))
 
     def serve(self) -> Report:
         """Batched generation: synthetic ragged requests through the
@@ -249,7 +297,9 @@ class Session:
 
         spec, cfg = self.spec, self.cfg
         run = RunConfig(attn_impl="dense", remat="none")
-        eng = Engine(cfg, run, s_max=spec.s_max, seed=spec.seed)
+        tracer, metrics = self._make_obs()
+        eng = Engine(cfg, run, s_max=spec.s_max, seed=spec.seed,
+                     tracer=tracer, metrics=metrics)
         sched = BatchScheduler(eng, max_batch=spec.max_batch)
         rng = np.random.default_rng(spec.seed)
         k = cfg.num_codebooks
@@ -271,6 +321,9 @@ class Session:
             per_request.append({"rid": rid, "tokens": int(toks.shape[0]),
                                 "head": head})
         n_tokens = sum(r["tokens"] for r in per_request)
+        metrics.set_gauge("serve/wall_s", wall)
+        metrics.set_gauge("serve/delivered_tokens_per_s",
+                          n_tokens / max(wall, 1e-9))
         measured = {
             "requests": spec.requests,
             "n_new": spec.n_new,
@@ -280,8 +333,10 @@ class Session:
             "tokens_per_s": n_tokens / max(wall, 1e-9),
             "batches": [g.stats() for g in sched.history],
             "per_request": per_request,
+            "metrics": metrics.section(),
         }
-        return self._report("serve", measured, self._predicted())
+        return self._report("serve", measured, self._predicted(),
+                            meta_extra=self._save_trace("serve", tracer))
 
     # ------------------------------------------------------------------
     # Campaigns: the paper's guidelines as one queryable sweep
@@ -453,8 +508,12 @@ class Session:
                 "strategy may degenerate (see measured.sync.tiers)")
         return meta
 
-    def _report(self, kind: str, measured: Dict, predicted: Dict) -> Report:
+    def _report(self, kind: str, measured: Dict, predicted: Dict, *,
+                meta_extra: Optional[Dict[str, Any]] = None) -> Report:
+        meta = self.report_meta()
+        if meta_extra:
+            meta.update(meta_extra)
         return Report(kind=kind, spec=self.spec.to_dict(),
                       plan=self.resolved_plan.to_dict(),
                       measured=measured, predicted=predicted,
-                      meta=self.report_meta()).validate()
+                      meta=meta).validate()

@@ -55,6 +55,8 @@ class JobSpec:
     ckpt_dir: str = ""
     ckpt_every: int = 0
     log_every: int = 10
+    trace_dir: str = ""           # write a Chrome-trace JSON per run here
+                                  # ("" = tracing stays in-memory only)
     # autotuning (repro.core.autotune via Session.tune):
     tune: bool = False            # run the autotuner; train/bench adopt its
                                   # measured kernel + microbatch choices

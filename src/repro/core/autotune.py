@@ -42,6 +42,7 @@ from repro.core import memory_model as mm
 from repro.core.hardware import ClusterSpec, MeshSpec
 from repro.core.planner import (Plan, estimate_step_time, plan as plan_fn,
                                 train_flops_per_step)
+from repro.obs import MetricsRegistry, Tracer  # stdlib-only, import-light
 
 # Schema id of the tuning section a Session.tune() Report carries under
 # ``measured["tuning"]`` (validated by repro.api.report.validate_report).
@@ -509,7 +510,9 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
              batch: int, seq: int, steps: int = 3, dp: int = 0,
              seed: int = 0, cache_path: str = "", use_cache: bool = True,
              bench_seq: int = 128, repeats: int = 2,
-             overlap_bucket_mbs: Tuple[float, ...] = DEFAULT_OVERLAP_BUCKET_MBS
+             overlap_bucket_mbs: Tuple[float, ...] = DEFAULT_OVERLAP_BUCKET_MBS,
+             tracer: Optional[Tracer] = None,
+             metrics: Optional[MetricsRegistry] = None
              ) -> TuneResult:
     """Run the whole closed loop once and return the :class:`TuneResult`.
 
@@ -517,23 +520,36 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
     container); ``cfg_full``/``shape``/``mesh`` name the production job the
     re-plan prices.  ``cache_path`` ("" = no persistence) is the JSON
     calibration cache; a cached entry for this backend/cluster/config skips the
-    trainer measurement unless ``use_cache`` is False."""
+    trainer measurement unless ``use_cache`` is False.  ``tracer``/``metrics``
+    (repro.obs) record the pass: one span per stage (``bench_kernels`` /
+    ``measure`` / ``tune_overlap`` / ``replan``) and the ``tune/*`` metric
+    family the Session's ``metrics/v1`` section carries."""
     import jax
 
+    if tracer is None:
+        tracer = Tracer(enabled=True)
+    if metrics is None:
+        metrics = MetricsRegistry()
     backend = jax.default_backend()
     cluster = mesh.cluster
     cluster_name = cluster.name or f"flat{cluster.n_chips}"
     key = f"{backend}/{cluster_name}/{cfg_cache_key(cfg_exec)}"
 
     # 1) algorithm microbenchmarks
-    kernels = bench_kernels(seq=bench_seq, repeats=repeats)
-    conv = choose_conv_algs(128, mesh.chip.hbm_bytes)  # Table 2's X_mini
+    with tracer.span("bench_kernels", seq=bench_seq) as sp_k:
+        kernels = bench_kernels(seq=bench_seq, repeats=repeats)
+        conv = choose_conv_algs(128, mesh.chip.hbm_bytes)  # Table 2's X_mini
+    metrics.observe("tune/bench_kernels_s", sp_k.elapsed_s)
+    for op, entry in kernels.items():
+        for name, t in entry.get("times_s", {}).items():
+            metrics.observe(f"tune/kernel/{op}/{name}_s", t)
 
     # 2) calibration: cached, or measured fresh
     cal = cached_calibration(cache_path, key) if (cache_path and use_cache) \
         else None
     measured: Dict[str, Any]
     overlap: Dict[str, Any] = {}
+    metrics.set_gauge("tune/calibration_from_cache", float(cal is not None))
     if cal is not None:
         measured = {"from_cache": True, "cache_key": key,
                     **{k: v for k, v in cal.measured.items()}}
@@ -542,33 +558,43 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
                        "chosen_bucket_mb": cal.bucket_mb,
                        "overlap_fraction": cal.overlap_fraction}
     else:
-        measured = measure_train_steps(cfg_exec, batch=batch, seq=seq,
-                                       steps=steps, dp=dp, seed=seed,
-                                       topology=mesh.topology)
-        micro = host_microbench()
+        with tracer.span("measure", steps=steps, dp=dp) as sp_m:
+            measured = measure_train_steps(cfg_exec, batch=batch, seq=seq,
+                                           steps=steps, dp=dp, seed=seed,
+                                           topology=mesh.topology)
+            micro = host_microbench()
+        metrics.observe("tune/measure_s", sp_m.elapsed_s)
         cal = fit_calibration(cfg_exec, batch=batch, seq=seq,
                               measured=measured, micro=micro,
                               backend=backend, cluster_name=cluster_name)
         # achieved comm/compute overlap + bucket sweet spot, calibrated
         # like the effective link bandwidth (dp >= 2 only: overlap needs
         # a data axis to hide anything under)
-        overlap = tune_overlap(cfg_exec, batch=batch, seq=seq, dp=dp,
-                               seed=seed, bucket_mbs=overlap_bucket_mbs,
-                               topology=mesh.topology)
+        with tracer.span("tune_overlap", dp=dp) as sp_o:
+            overlap = tune_overlap(cfg_exec, batch=batch, seq=seq, dp=dp,
+                                   seed=seed, bucket_mbs=overlap_bucket_mbs,
+                                   topology=mesh.topology)
+        metrics.observe("tune/tune_overlap_s", sp_o.elapsed_s)
         if overlap.get("measured"):
             cal = replace(cal,
                           overlap_fraction=float(overlap["overlap_fraction"]),
                           bucket_mb=float(overlap["chosen_bucket_mb"]))
         if cache_path:
             save_calibration(cache_path, cal)
+    metrics.set_gauge("tune/achieved_flops", cal.achieved_flops)
+    metrics.set_gauge("tune/link_bw", cal.link_bw)
+    if overlap.get("measured"):
+        metrics.set_gauge("tune/overlap_fraction",
+                          float(overlap.get("overlap_fraction", 0.0)))
 
-    # 3) the paper's procedure on the production job
-    base_plan = plan_fn(cfg_full, shape, mesh)
-    minibatch = tune_minibatch(cfg_full, shape, mesh, base_plan)
-
-    # 4) re-plan on measured constants
-    cal_mesh = cal.apply(mesh)
-    tuned_plan = plan_fn(cfg_full, shape, cal_mesh)
+    # 3) the paper's procedure on the production job + 4) re-plan on
+    # measured constants
+    with tracer.span("replan") as sp_r:
+        base_plan = plan_fn(cfg_full, shape, mesh)
+        minibatch = tune_minibatch(cfg_full, shape, mesh, base_plan)
+        cal_mesh = cal.apply(mesh)
+        tuned_plan = plan_fn(cfg_full, shape, cal_mesh)
+    metrics.observe("tune/replan_s", sp_r.elapsed_s)
 
     # prediction check on the *executed* job: does the calibrated model land
     # nearer the wall clock than the datasheet one?  (With a cached
@@ -609,6 +635,9 @@ def autotune(cfg_exec: ModelConfig, cfg_full: ModelConfig,
             },
         },
     }
+    metrics.set_gauge("tune/measured_step_s", meas_t)
+    metrics.set_gauge("tune/est_step_calibrated_s", cal_t)
+    metrics.set_gauge("tune/est_step_uncalibrated_s", uncal_t)
     return TuneResult(
         backend=backend, cluster=cluster_name, minibatch=minibatch,
         kernels=kernels, conv_alg=conv, calibration=cal, measured=measured,

@@ -121,6 +121,16 @@ class BucketPlan:
         return cls.from_dict(json.loads(s))
 
 
+def bucket_span_args(plan: BucketPlan, k: int) -> Dict[str, Any]:
+    """Span args (``repro.obs``) identifying bucket ``k`` in a trace:
+    index, wire payload, and leaf count.  Every executor of a BucketPlan
+    labels its ``bucket_sync`` spans through this helper, so traces from
+    the trainer (or any future executor) are comparable bucket-for-bucket
+    and reconcile against ``SyncReport.bucket_sizes_bytes``."""
+    return {"bucket": int(k), "bytes": int(plan.sizes_bytes[k]),
+            "n_leaves": len(plan.buckets[k])}
+
+
 def leaf_sizes_bytes(tree) -> Tuple[float, ...]:
     """fp32 payload per leaf of a pytree, in flatten order (the sync wire
     view: every strategy moves gradients as fp32, see collectives)."""

@@ -25,6 +25,14 @@ the serial trainer — same collectives over the same per-leaf payloads —
 and :meth:`report` adds the measured ``overlap_fraction`` /
 ``exposed_comm_time`` against the serial calibration.
 
+Telemetry (``repro.obs``): every phase above is a tracer span — ``compute``
+/ ``dist_update`` / ``param_update``, ``bucket_sync`` (per bucket, with the
+bucket index and payload bytes as span args) and ``fused_step`` — and the
+span wall clocks ARE the values that land in ``StepTimes``/``SyncReport``
+(no second clock).  The same numbers stream into a ``MetricsRegistry``
+(``train/compute_s`` etc. histograms, ``train/overlap_fraction`` gauges),
+which ``Session.train`` renders into the Report's ``metrics/v1`` section.
+
 Numerics: each device computes the mean loss over its batch shard; the
 strategy returns the data-axis mean, so with equal shard sizes (enforced)
 the synced gradient equals the full-batch gradient up to reduction order —
@@ -35,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple, Union
 
@@ -51,9 +58,11 @@ from repro.core.pipeline import StepTimes
 from repro.distributed.collectives import SyncStrategy, get_strategy
 from repro.distributed.compression import Compressor, get_compressor
 from repro.distributed.overlap import (BucketPlan, DEFAULT_BUCKET_MB,
-                                       build_bucket_plan, bucket_leaves,
-                                       mb_to_bytes, unbucket_leaves)
+                                       bucket_span_args, build_bucket_plan,
+                                       bucket_leaves, mb_to_bytes,
+                                       unbucket_leaves)
 from repro.launch.steps import build_grad_fn
+from repro.obs import MetricsRegistry, Tracer
 from repro.models import model as M
 from repro.models.blocks import RunConfig
 from repro.models.common import materialize
@@ -150,8 +159,17 @@ class DataParallelTrainer:
                  link_bw: float = DEFAULT_LINK_BW,
                  topology: Optional[ClusterSpec] = None,
                  sync_overlap: bool = False,
-                 bucket_mb: float = DEFAULT_BUCKET_MB):
+                 bucket_mb: float = DEFAULT_BUCKET_MB,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg, self.run, self.opt = cfg, run, opt
+        # the phase wall clocks that feed StepTimes/SyncReport come FROM the
+        # tracer's spans, so the trainer always times against an *enabled*
+        # tracer — a disabled one would zero the measurements, so it is
+        # substituted by a private live clock (events then go nowhere)
+        self.tracer = (tracer if tracer is not None and tracer.enabled
+                       else Tracer(enabled=True))
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         if bucket_mb <= 0:
             raise ValueError(f"bucket_mb must be > 0, got {bucket_mb}")
         self.sync_overlap = bool(sync_overlap)
@@ -222,7 +240,10 @@ class DataParallelTrainer:
                   link_bw: float = DEFAULT_LINK_BW,
                   topology: Optional[ClusterSpec] = None,
                   sync_overlap: Optional[bool] = None,
-                  bucket_mb: Optional[float] = None) -> "DataParallelTrainer":
+                  bucket_mb: Optional[float] = None,
+                  tracer: Optional[Tracer] = None,
+                  metrics: Optional[MetricsRegistry] = None
+                  ) -> "DataParallelTrainer":
         """Trainer whose sync strategy comes from a planner ``Plan`` —
         ``resolve_sync()`` supplies the Lemma-3.2-sized strategy instance
         (the topology defaults to the plan's own, the overlap knobs to the
@@ -237,7 +258,7 @@ class DataParallelTrainer:
         return cls(cfg, run, opt, strategy=plan.resolve_sync(),
                    compression=compression, devices=devices, link_bw=link_bw,
                    topology=topology, sync_overlap=sync_overlap,
-                   bucket_mb=bucket_mb)
+                   bucket_mb=bucket_mb, tracer=tracer, metrics=metrics)
 
     # ------------------------------------------------------------------
     def _build_phases(self):
@@ -351,51 +372,60 @@ class DataParallelTrainer:
     def _calib_step(self, params, opt_state, batch, ef):
         """Serial-bucketed step: identical numerics to the fused path, but
         each bucket's collective blocks, yielding the per-bucket serial
-        comm decomposition the overlap measurement is set against."""
+        comm decomposition the overlap measurement is set against.  Every
+        phase is a tracer span; the span wall clocks ARE the measurements
+        (``per_bucket_comm_s`` is the ``bucket_sync`` span durations)."""
         plan = self._bucket_plan
-        t0 = time.perf_counter()
-        losses, gstack = self._grad_fn(params, batch)
-        jax.block_until_ready(jax.tree_util.tree_leaves(gstack)[0])
-        t1 = time.perf_counter()
-        g_leaves, treedef = jax.tree_util.tree_flatten(gstack)
-        e_leaves = (jax.tree_util.tree_leaves(ef) if ef is not None else None)
-        g_buckets = bucket_leaves(g_leaves, plan)
-        e_buckets = (bucket_leaves(e_leaves, plan)
-                     if e_leaves is not None else [None] * plan.n_buckets)
+        tr = self.tracer
+        with tr.span("compute") as sp_c:
+            losses, gstack = self._grad_fn(params, batch)
+            jax.block_until_ready(jax.tree_util.tree_leaves(gstack)[0])
         per_bucket: List[float] = []
-        out_g: List[Any] = []
-        out_e: List[Any] = []
-        for gb, eb in zip(g_buckets, e_buckets):
-            tb = time.perf_counter()
-            g_syn, ef_out = self._bucket_sync_fn(gb, eb)
-            jax.block_until_ready(g_syn)
-            per_bucket.append(time.perf_counter() - tb)
-            out_g.append(g_syn)
-            if ef_out is not None:
-                out_e.append(ef_out)
-        t2 = time.perf_counter()
-        grads = jax.tree_util.tree_unflatten(
-            treedef, unbucket_leaves(out_g, plan))
-        ef_new = (jax.tree_util.tree_unflatten(
-            treedef, unbucket_leaves(out_e, plan)) if out_e else None)
-        params, opt_state, gnorm = self._update_fn(params, opt_state, grads)
-        jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
-        t3 = time.perf_counter()
+        with tr.span("dist_update", n_buckets=plan.n_buckets) as sp_s:
+            g_leaves, treedef = jax.tree_util.tree_flatten(gstack)
+            e_leaves = (jax.tree_util.tree_leaves(ef)
+                        if ef is not None else None)
+            g_buckets = bucket_leaves(g_leaves, plan)
+            e_buckets = (bucket_leaves(e_leaves, plan)
+                         if e_leaves is not None else [None] * plan.n_buckets)
+            out_g: List[Any] = []
+            out_e: List[Any] = []
+            for k, (gb, eb) in enumerate(zip(g_buckets, e_buckets)):
+                with tr.span("bucket_sync",
+                             **bucket_span_args(plan, k)) as sp_b:
+                    g_syn, ef_out = self._bucket_sync_fn(gb, eb)
+                    jax.block_until_ready(g_syn)
+                per_bucket.append(sp_b.elapsed_s)
+                out_g.append(g_syn)
+                if ef_out is not None:
+                    out_e.append(ef_out)
+        with tr.span("param_update") as sp_u:
+            grads = jax.tree_util.tree_unflatten(
+                treedef, unbucket_leaves(out_g, plan))
+            ef_new = (jax.tree_util.tree_unflatten(
+                treedef, unbucket_leaves(out_e, plan)) if out_e else None)
+            params, opt_state, gnorm = self._update_fn(
+                params, opt_state, grads)
+            jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
         # the last calibration step is the clean one (step 0 pays compiles)
-        self._calib = {"compute": t1 - t0, "comm": t2 - t1,
-                       "update": t3 - t2, "per_bucket": tuple(per_bucket)}
+        self._calib = {"compute": sp_c.elapsed_s, "comm": sp_s.elapsed_s,
+                       "update": sp_u.elapsed_s,
+                       "per_bucket": tuple(per_bucket)}
+        self._publish_phases(sp_c.elapsed_s, sp_s.elapsed_s, sp_u.elapsed_s)
+        for t in per_bucket:
+            self.metrics.observe("train/bucket_comm_s", t)
         return params, opt_state, losses, ef_new, gnorm, {
-            "t_comm": t2 - t1, "t_update": t3 - t2}
+            "t_comm": sp_s.elapsed_s, "t_update": sp_u.elapsed_s}
 
     def _overlap_step(self, params, opt_state, batch, ef):
-        """Fused overlapped step, timed as one region; the serial
+        """Fused overlapped step, timed as one span; the serial
         calibration decomposition attributes the wall clock to exposed
         comm vs (hidden-under) update/compute."""
-        t0 = time.perf_counter()
-        params, opt_state, losses, ef_new, gnorm = self._fused_fn(
-            params, opt_state, batch, ef)
-        jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
-        wall = time.perf_counter() - t0
+        with self.tracer.span("fused_step") as sp:
+            params, opt_state, losses, ef_new, gnorm = self._fused_fn(
+                params, opt_state, batch, ef)
+            jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
+        wall = sp.elapsed_s
         comm_s = self._calib.get("comm", 0.0)
         comp_s = self._calib.get("compute", 0.0)
         upd_s = self._calib.get("update", 0.0)
@@ -403,6 +433,10 @@ class DataParallelTrainer:
         self._fused_steps.append(
             {"wall_s": wall, "exposed_comm_s": exposed,
              "serial_comm_s": comm_s})
+        self.metrics.inc("train/steps")
+        self.metrics.observe("train/step_s", wall)
+        self.metrics.observe("train/fused_step_s", wall)
+        self.metrics.observe("train/exposed_comm_s", exposed)
         t_update = min(upd_s, max(wall - exposed, 0.0))
         return params, opt_state, losses, ef_new, gnorm, {
             "t_comm": exposed, "t_update": t_update}
@@ -461,23 +495,37 @@ class DataParallelTrainer:
 
         def step(params, opt_state, batch):
             ef = opt_state.pop("ef", None)
-            losses, gstack = self._grad_fn(params, batch)
-            jax.block_until_ready(jax.tree_util.tree_leaves(gstack)[0])
-            t1 = time.perf_counter()
-            grads, ef = self._sync_fn(gstack, ef)
-            jax.block_until_ready(jax.tree_util.tree_leaves(grads)[0])
-            t2 = time.perf_counter()
-            params, opt_state, gnorm = self._update_fn(
-                params, opt_state, grads)
-            jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
-            t3 = time.perf_counter()
+            tr = self.tracer
+            with tr.span("compute") as sp_c:
+                losses, gstack = self._grad_fn(params, batch)
+                jax.block_until_ready(jax.tree_util.tree_leaves(gstack)[0])
+            with tr.span("dist_update") as sp_s:
+                grads, ef = self._sync_fn(gstack, ef)
+                jax.block_until_ready(jax.tree_util.tree_leaves(grads)[0])
+            with tr.span("param_update") as sp_u:
+                params, opt_state, gnorm = self._update_fn(
+                    params, opt_state, grads)
+                jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
             if ef is not None:
                 opt_state["ef"] = ef
+            self._publish_phases(sp_c.elapsed_s, sp_s.elapsed_s,
+                                 sp_u.elapsed_s)
             metrics = {"loss": jnp.mean(losses), "grad_norm": gnorm,
-                       "t_comm": t2 - t1, "t_update": t3 - t2}
+                       "t_comm": sp_s.elapsed_s, "t_update": sp_u.elapsed_s}
             return params, opt_state, metrics
 
         return step
+
+    def _publish_phases(self, compute_s: float, comm_s: float,
+                        update_s: float) -> None:
+        """Per-step phase histograms in the shared registry (the
+        metrics/v1 ``train/*`` family)."""
+        m = self.metrics
+        m.inc("train/steps")
+        m.observe("train/compute_s", compute_s)
+        m.observe("train/dist_update_s", comm_s)
+        m.observe("train/param_update_s", update_s)
+        m.observe("train/step_s", compute_s + comm_s + update_s)
 
     # ------------------------------------------------------------------
     def train(self, *, batch: int, seq: int, steps: int, seed: int = 0,
@@ -508,7 +556,7 @@ class DataParallelTrainer:
             seed=seed, log_every=log_every, params=params,
             opt_state=opt_state, step_fn=self.step_fn(),
             batch_sharding=batch_sharding,
-            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, tracer=self.tracer)
         self._times = res.step_times
         return res
 
@@ -544,6 +592,15 @@ class DataParallelTrainer:
             else:  # fused path never ran (too few steps): fully exposed
                 exposed = comm
             frac = (min(max(1.0 - exposed / comm, 0.0), 1.0)
+                    if comm > 0 else 0.0)
+        # registry view of the same numbers (the metrics/v1 train family)
+        m = self.metrics
+        m.set_gauge("train/measured_comm_s", comm)
+        m.set_gauge("train/overlap_fraction", frac)
+        m.set_gauge("train/exposed_comm_time_s", exposed)
+        m.set_gauge("train/n_buckets", bplan.n_buckets if bplan else 1)
+        m.set_gauge("train/effective_link_bw",
+                    self.strategy.wire_bytes(wire_payload, self.dp) / comm
                     if comm > 0 else 0.0)
         return SyncReport(
             strategy=self.strategy.name, compression=self.compressor.name,

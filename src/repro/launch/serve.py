@@ -9,6 +9,8 @@ Engine/BatchScheduler happens inside :meth:`repro.api.Session.serve`.
 from __future__ import annotations
 
 import argparse
+import json
+from pathlib import Path
 
 from repro.api import JobSpec, Session
 
@@ -22,19 +24,44 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--report-out", default="",
                     help="write the unified Report JSON here")
+    ap.add_argument("--trace-dir", default="",
+                    help="write a Chrome-trace JSON of the run here "
+                         "(open in chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the run's metrics/v1 section (repro.obs) "
+                         "to this path")
     args = ap.parse_args()
 
     spec = JobSpec(arch=args.arch, reduced=True, shape="decode_32k",
                    requests=args.requests, n_new=args.n_new,
-                   s_max=args.s_max, max_batch=args.max_batch)
+                   s_max=args.s_max, max_batch=args.max_batch,
+                   trace_dir=args.trace_dir)
     rep = Session(spec).serve()
-    for r in rep.measured["per_request"]:
+    m = rep.measured
+    for r in m["per_request"]:
         print(f"req {r['rid']}: {r['tokens']} tokens, head={r['head']}")
-    print(f"{rep.measured['n_tokens']} tokens in "
-          f"{rep.measured['wall_s']*1e3:.0f} ms "
-          f"({rep.measured['tokens_per_s']:.1f} tok/s)")
+    if args.metrics_json:
+        p = Path(args.metrics_json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(m["metrics"], indent=2))
+        print(f"wrote metrics {p}")
+    if "trace_file" in rep.meta:
+        print(f"wrote trace {rep.meta['trace_file']} "
+              f"({rep.meta['trace_events']} events)")
     if args.report_out:
         print(f"wrote {rep.save(args.report_out)}")
+    # machine-parseable summary line (tools/bench_trajectory.py reads it)
+    hists = m["metrics"]["histograms"]
+    summary = {
+        "kind": "serve",
+        "requests": m["requests"],
+        "n_tokens": m["n_tokens"],
+        "wall_s": m["wall_s"],
+        "tokens_per_s": m["tokens_per_s"],
+        "decode_p99_s": hists.get("serve/decode_s", {}).get("p99", 0.0),
+        "prefill_p99_s": hists.get("serve/prefill_s", {}).get("p99", 0.0),
+    }
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
 
 import numpy as np
 
@@ -38,7 +39,8 @@ def build_spec(args) -> JobSpec:
         sync_overlap=args.overlap, bucket_mb=args.bucket_mb,
         tune=args.autotune, tune_cache=args.tune_cache,
         ckpt_dir=args.ckpt_dir,
-        ckpt_every=50 if args.ckpt_dir else 0)
+        ckpt_every=50 if args.ckpt_dir else 0,
+        trace_dir=getattr(args, "trace_dir", ""))
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -85,6 +87,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "('' disables persistence)")
     ap.add_argument("--report-out", default="",
                     help="write the unified Report JSON here")
+    ap.add_argument("--trace-dir", default="",
+                    help="write a Chrome-trace JSON of the run here "
+                         "(open in chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the run's metrics/v1 section (repro.obs) "
+                         "to this path")
     return ap
 
 
@@ -123,9 +131,31 @@ def main():
     losses = m["losses"]
     print(f"loss {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}; "
           f"{m['tokens_per_s']:,.0f} tok/s; R_O={m['r_o']:.4f}")
+    if args.metrics_json:
+        p = Path(args.metrics_json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(m["metrics"], indent=2))
+        print(f"wrote metrics {p}")
+    if "trace_file" in rep.meta:
+        print(f"wrote trace {rep.meta['trace_file']} "
+              f"({rep.meta['trace_events']} events)")
     if args.report_out:
         path = rep.save(args.report_out)
         print(f"wrote {path}")
+    # machine-parseable summary line (tools/bench_trajectory.py reads it)
+    summary = {
+        "kind": "train",
+        "loss_first": float(np.mean(losses[:5])),
+        "loss_last": float(np.mean(losses[-5:])),
+        "tokens_per_s": m["tokens_per_s"],
+        "r_o": m["r_o"],
+        "step_time_s": m["step_times_mean"].get("compute", 0.0)
+        + m["step_times_mean"].get("dist_update", 0.0)
+        + m["step_times_mean"].get("param_update", 0.0),
+    }
+    if "sync" in m and m["sync"].get("sync_overlap"):
+        summary["overlap_fraction"] = m["sync"]["overlap_fraction"]
+    print(json.dumps(summary))
 
 
 if __name__ == "__main__":

@@ -5,10 +5,17 @@ simple continuous-batch scheduler.
 Right-padded prompts + per-example ``pos`` masking means ragged batches
 share one prefill; the decode loop is one jitted step per token across the
 whole batch (the decode_32k / long_500k shapes lower exactly this step).
+
+Telemetry (``repro.obs``): ``prefill`` and ``decode`` are tracer spans
+whose wall clocks ARE the ``GenResult`` timings (no second clock), and the
+engine/scheduler publish the serving family into a ``MetricsRegistry`` —
+``serve/prefill_s`` / ``serve/decode_s`` / ``serve/decode_token_s``
+latency histograms, ``serve/tokens`` counters, ``serve/queue_depth`` and
+``serve/batch_size`` scheduler histograms — rendered by ``Session.serve``
+into the Report's ``metrics/v1`` section.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional
 
@@ -21,6 +28,7 @@ from repro.models import model as M
 from repro.models.attention import _window_for
 from repro.models.blocks import RunConfig
 from repro.models.common import materialize
+from repro.obs import MetricsRegistry, Tracer
 
 
 def _pad_to(x, size: int, axis: int):
@@ -84,10 +92,19 @@ class GenResult:
 
 class Engine:
     def __init__(self, cfg: ModelConfig, run: RunConfig, params=None, *,
-                 s_max: int = 512, seed: int = 0):
+                 s_max: int = 512, seed: int = 0,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self.run = run
         self.s_max = s_max
+        # GenResult timings come FROM the tracer's spans, so the engine
+        # always times against an *enabled* tracer — a disabled one would
+        # zero prefill_s/decode_s, so it is substituted by a private live
+        # clock (events then go nowhere)
+        self.tracer = (tracer if tracer is not None and tracer.enabled
+                       else Tracer(enabled=True))
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         if params is None:
             params = materialize(M.model_specs(cfg), jax.random.PRNGKey(seed))
         self.params = params
@@ -116,36 +133,44 @@ class Engine:
             lengths = np.full((B,), S_prompt, np.int32)
         n_img = cfg.num_image_tokens if image_embeds is not None else 0
 
-        t0 = time.perf_counter()
-        batch = {"tokens": jnp.asarray(prompts)}
-        if image_embeds is not None:
-            batch["image_embeds"] = jnp.asarray(image_embeds)
-        logits, caches, _ = self._prefill(self.params, batch)
-        caches = place_prefill_cache(cfg, caches, self.s_max,
-                                     S_prompt + n_img)
-        # next-token logits at each example's true last position
-        idx = jnp.asarray(lengths - 1 + n_img)
-        last_logits = jnp.take_along_axis(
-            logits, idx.reshape((B, 1) + (1,) * (logits.ndim - 2)), axis=1)
-        jax.block_until_ready(last_logits)
-        t_prefill = time.perf_counter() - t0
+        with self.tracer.span("prefill", batch=B, prompt_len=S_prompt) as sp_p:
+            batch = {"tokens": jnp.asarray(prompts)}
+            if image_embeds is not None:
+                batch["image_embeds"] = jnp.asarray(image_embeds)
+            logits, caches, _ = self._prefill(self.params, batch)
+            caches = place_prefill_cache(cfg, caches, self.s_max,
+                                         S_prompt + n_img)
+            # next-token logits at each example's true last position
+            idx = jnp.asarray(lengths - 1 + n_img)
+            last_logits = jnp.take_along_axis(
+                logits, idx.reshape((B, 1) + (1,) * (logits.ndim - 2)), axis=1)
+            jax.block_until_ready(last_logits)
+        t_prefill = sp_p.elapsed_s
 
         key = jax.random.PRNGKey(seed)
         pos = jnp.asarray(lengths + n_img, jnp.int32)  # next position to write
         tok = self._sample(last_logits, greedy, key)
         out = [np.asarray(tok)]
-        t0 = time.perf_counter()
-        for i in range(n_new - 1):
-            key = jax.random.fold_in(key, i)
-            tk = tok[:, None] if not cfg.num_codebooks else tok[:, None, :]
-            logits, caches = self._decode(self.params, tk, pos, caches)
-            tok = self._sample(logits, greedy, key)
-            out.append(np.asarray(tok))
-            pos = pos + 1
-        jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
+        with self.tracer.span("decode", batch=B, n_new=n_new) as sp_d:
+            for i in range(n_new - 1):
+                key = jax.random.fold_in(key, i)
+                tk = tok[:, None] if not cfg.num_codebooks else tok[:, None, :]
+                logits, caches = self._decode(self.params, tk, pos, caches)
+                tok = self._sample(logits, greedy, key)
+                out.append(np.asarray(tok))
+                pos = pos + 1
+            jax.block_until_ready(tok)
+        t_decode = sp_d.elapsed_s
         tokens = np.stack(out, axis=1)
         tps = B * n_new / max(t_prefill + t_decode, 1e-9)
+        m = self.metrics
+        m.observe("serve/prefill_s", t_prefill)
+        m.observe("serve/decode_s", t_decode)
+        if n_new > 1:
+            m.observe("serve/decode_token_s", t_decode / (n_new - 1))
+        m.inc("serve/tokens", B * n_new)
+        m.inc("serve/generate_calls")
+        m.set_gauge("serve/tokens_per_s", tps)
         return GenResult(tokens, t_prefill, t_decode, tps)
 
 
@@ -177,7 +202,11 @@ class BatchScheduler:
     def run(self) -> Dict[int, np.ndarray]:
         results: Dict[int, np.ndarray] = {}
         self.history = []
+        m = self.engine.metrics
+        tracer = self.engine.tracer
+        b_idx = 0
         while self.pending:
+            m.observe("serve/queue_depth", len(self.pending))
             batch = self.pending[: self.max_batch]
             self.pending = self.pending[self.max_batch :]
             max_len = max(r.prompt.shape[0] for r in batch)
@@ -189,7 +218,12 @@ class BatchScheduler:
             for i, r in enumerate(batch):
                 prompts[i, : r.prompt.shape[0]] = r.prompt
                 lengths[i] = r.prompt.shape[0]
-            res = self.engine.generate(prompts, n_new, lengths=lengths)
+            with tracer.span("serve_batch", batch_index=b_idx,
+                             size=len(batch)):
+                res = self.engine.generate(prompts, n_new, lengths=lengths)
+            b_idx += 1
+            m.observe("serve/batch_size", len(batch))
+            m.inc("serve/requests", len(batch))
             self.history.append(res)
             for i, r in enumerate(batch):
                 results[r.rid] = res.tokens[i, : r.n_new]

@@ -27,6 +27,7 @@ from repro.data.pipeline import PrefetchLoader
 from repro.models import model as M
 from repro.models.blocks import RunConfig
 from repro.models.common import materialize
+from repro.obs.trace import Tracer
 from repro.optim import adamw as opt_lib
 from repro.launch.steps import build_train_step
 from repro.checkpoint import io as ckpt_io
@@ -71,13 +72,24 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
           log_every: int = 10,
           params=None, opt_state=None,
           step_fn: Optional[Callable] = None,
-          batch_sharding: Optional[Dict[str, Any]] = None) -> TrainResult:
+          batch_sharding: Optional[Dict[str, Any]] = None,
+          tracer: Optional[Tracer] = None) -> TrainResult:
     """``step_fn`` (optional) replaces the default jitted train step with a
     caller-built executor — e.g. repro.distributed.DataParallelTrainer's
     phase-split step. It may attach host-side phase timings to metrics as
     plain floats under ``t_comm`` / ``t_update``; they are split out of
     compute into StepTimes.dist_update / .param_update. ``batch_sharding``
-    maps input names to shardings for the loader's h2d step."""
+    maps input names to shardings for the loader's h2d step.  ``tracer``
+    (repro.obs) wraps every iteration in a ``step`` span (step index as a
+    span arg) and the loader wait in ``data_wait``; phase-level spans come
+    from the ``step_fn`` itself when it traces (the DataParallelTrainer
+    does).
+
+    The ``step`` span's wall clock IS the StepTimes compute measurement, so
+    the loop needs a live clock: a missing/disabled tracer is replaced by a
+    private enabled one (events go nowhere, timing still works)."""
+    if tracer is None or not tracer.enabled:
+        tracer = Tracer(enabled=True)
     key = jax.random.PRNGKey(seed)
     if params is None:
         params = materialize(M.model_specs(cfg), key)
@@ -98,11 +110,13 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
     pending_ckpt = None
     try:
         for i in range(steps):
-            dev_batch, bt = next(loader)
-            t0 = time.perf_counter()
-            params, opt_state, metrics = step_fn(params, opt_state, dev_batch)
-            loss = float(metrics["loss"])  # blocks
-            t_comp = time.perf_counter() - t0
+            with tracer.span("data_wait", step=i):
+                dev_batch, bt = next(loader)
+            with tracer.span("step", step=i) as sp:
+                params, opt_state, metrics = step_fn(params, opt_state,
+                                                     dev_batch)
+                loss = float(metrics["loss"])  # blocks
+            t_comp = sp.elapsed_s
             t_comm = float(metrics.pop("t_comm", 0.0))
             t_upd = float(metrics.pop("t_update", 0.0))
             losses.append(loss)

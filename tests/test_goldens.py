@@ -18,6 +18,8 @@ from repro.api.report import (_MEASURED_REQUIRED, _PLAN_REQUIRED,
                               _PREDICTED_REQUIRED, _SPEC_REQUIRED,
                               _SYNC_OVERLAP_REQUIRED, _TUNING_REQUIRED,
                               KINDS, SCHEMA_ID)
+from repro.obs.metrics import (HISTOGRAM_KEYS, METRICS_SCHEMA_ID,
+                               validate_metrics)
 
 GOLDENS = Path(__file__).resolve().parent / "goldens"
 REPORT_GOLDENS = ("report_v1_plan.json", "report_v1_train.json",
@@ -137,6 +139,58 @@ def test_golden_tuning_rejects_section_mutations():
         validate_report(d)
     d = copy.deepcopy(golden)
     d["measured"]["tuning"]["overlap"]["overlap_fraction"] = -0.5
+    with pytest.raises(ValueError):
+        validate_report(d)
+
+
+def test_golden_metrics_validates():
+    """The standalone metrics/v1 golden and the copy embedded in the train
+    report both validate, and the train report carries the telemetry the
+    observability layer promises (phase histograms + overlap gauges)."""
+    m = _load("metrics_v1.json")
+    validate_metrics(m)
+    assert m["schema"] == METRICS_SCHEMA_ID
+    train = _load("report_v1_train.json")
+    validate_metrics(train["measured"]["metrics"])
+    hists = train["measured"]["metrics"]["histograms"]
+    for name in ("train/compute_s", "train/dist_update_s",
+                 "train/param_update_s", "train/step_s",
+                 "train/bucket_comm_s"):
+        assert name in hists, f"train metrics missing {name}"
+        for key in HISTOGRAM_KEYS:
+            assert key in hists[name]
+    assert "train/overlap_fraction" in train["measured"]["metrics"]["gauges"]
+
+
+def test_golden_metrics_rejects_single_field_mutations():
+    """Every single-field mutation the validator guards against must be
+    rejected — section deletions, histogram-key deletions (derived from
+    HISTOGRAM_KEYS so the list cannot drift), schema corruption, negative
+    counters, and quantile disorder."""
+    golden = _load("metrics_v1.json")
+    hist_name = next(iter(golden["histograms"]))
+
+    def mutations():
+        for sect in ("schema", "counters", "gauges", "histograms"):
+            yield lambda d, s=sect: d.pop(s)
+        for key in HISTOGRAM_KEYS:
+            yield lambda d, k=key: d["histograms"][hist_name].pop(k)
+        yield lambda d: d.update(schema="repro.api/metrics/v0")
+        yield lambda d: d["counters"].update({"train/steps": -1.0})
+        yield lambda d: d["gauges"].update({"train/r_o": "high"})
+        yield lambda d: d["histograms"][hist_name].update(
+            p50=d["histograms"][hist_name]["max"] + 1.0)
+        yield lambda d: d["histograms"][hist_name].update(count=0)
+
+    for i, corrupt in enumerate(mutations()):
+        d = copy.deepcopy(golden)
+        corrupt(d)
+        with pytest.raises(ValueError):
+            validate_metrics(d)
+    # and through the Report path: a corrupted embedded section is rejected
+    train = _load("report_v1_train.json")
+    d = copy.deepcopy(train)
+    d["measured"]["metrics"]["schema"] = "repro.api/metrics/v0"
     with pytest.raises(ValueError):
         validate_report(d)
 

@@ -1,0 +1,215 @@
+"""bench-trajectory — the per-PR performance ledger.
+
+Every CI run appends one record per area to ``BENCH_<area>.json`` (train,
+serve) — headline numbers (step time, tokens/s, overlap fraction, serve
+p99) plus the git sha — so speedups and regressions land *recorded* instead
+of anecdotal.  The compare mode prices the newest record against the
+previous one under a per-metric regression budget: within budget passes,
+over budget warns (``--warn-only``, the default posture for a metric's
+first landing) or fails.
+
+    # append a record distilled from a Report JSON
+    PYTHONPATH=src python tools/bench_trajectory.py append \
+        --area train --report results/quickstart_train_report.json
+
+    # compare the last two records (exit 1 on an over-budget regression)
+    python tools/bench_trajectory.py compare --area train [--warn-only]
+
+Only the *headline* metrics are budget-checked (train: ``step_time_s``
+down-is-good, ``tokens_per_s`` up-is-good; serve: ``tokens_per_s``,
+``decode_p99_s``); everything else in a record is informational.  CPU CI
+wall clocks are noisy, so the default budget is generous (35%) — the
+trajectory's job is catching step-function regressions and recording the
+trend, not 2% drifts.
+
+Stdlib-only except for the Report schema check (repro.api, via PYTHONPATH).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional
+
+REPO = Path(__file__).resolve().parent.parent
+
+TRAJECTORY_SCHEMA_ID = "repro.obs/bench-trajectory/v1"
+
+# area -> headline metrics under budget: {name: direction}, where "down"
+# means smaller is better (regression = increase) and "up" the reverse
+HEADLINE = {
+    "train": {"step_time_s": "down", "tokens_per_s": "up"},
+    "serve": {"decode_p99_s": "down", "tokens_per_s": "up"},
+}
+DEFAULT_BUDGET = 0.35  # fractional regression allowed on a headline metric
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              cwd=REPO, capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def trajectory_path(area: str) -> Path:
+    return REPO / f"BENCH_{area}.json"
+
+
+def load_trajectory(area: str) -> Dict[str, Any]:
+    p = trajectory_path(area)
+    if not p.exists():
+        return {"schema": TRAJECTORY_SCHEMA_ID, "area": area, "records": []}
+    d = json.loads(p.read_text())
+    if d.get("schema") != TRAJECTORY_SCHEMA_ID:
+        raise SystemExit(f"{p}: schema {d.get('schema')!r} != "
+                         f"{TRAJECTORY_SCHEMA_ID!r}")
+    return d
+
+
+def save_trajectory(area: str, d: Dict[str, Any]) -> Path:
+    p = trajectory_path(area)
+    p.write_text(json.dumps(d, indent=2) + "\n")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Record distillation: Report JSON -> one flat trajectory record
+# ---------------------------------------------------------------------------
+
+
+def _train_record(rep: Dict[str, Any]) -> Dict[str, float]:
+    m = rep["measured"]
+    st = m.get("step_times_mean", {})
+    out = {
+        "step_time_s": (st.get("compute", 0.0) + st.get("dist_update", 0.0)
+                        + st.get("param_update", 0.0)),
+        "tokens_per_s": float(m["tokens_per_s"]),
+        "r_o": float(m.get("r_o", 0.0)),
+    }
+    sync = m.get("sync") or {}
+    if sync.get("sync_overlap"):
+        out["overlap_fraction"] = float(sync["overlap_fraction"])
+        out["exposed_comm_s"] = float(sync["exposed_comm_time"])
+    return out
+
+
+def _serve_record(rep: Dict[str, Any]) -> Dict[str, float]:
+    m = rep["measured"]
+    hists = (m.get("metrics") or {}).get("histograms", {})
+    decode = hists.get("serve/decode_s", {})
+    prefill = hists.get("serve/prefill_s", {})
+    return {
+        "tokens_per_s": float(m["tokens_per_s"]),
+        "wall_s": float(m.get("wall_s", 0.0)),
+        "decode_p99_s": float(decode.get("p99", 0.0)),
+        "prefill_p99_s": float(prefill.get("p99", 0.0)),
+        "requests": float(m.get("requests", 0)),
+    }
+
+
+DISTILL = {"train": _train_record, "serve": _serve_record}
+
+
+def append_record(area: str, report_path: str, *,
+                  sha: Optional[str] = None,
+                  note: str = "") -> Dict[str, Any]:
+    rep = json.loads(Path(report_path).read_text())
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.api import validate_report
+
+    validate_report(rep)
+    kind = rep["kind"]
+    metrics = DISTILL[area](rep)
+    record: Dict[str, Any] = {
+        "sha": sha or git_sha(),
+        "created": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "kind": kind,
+        "spec": {k: rep["spec"].get(k) for k in
+                 ("arch", "reduced", "steps", "batch", "seq", "dp",
+                  "sync_overlap", "requests", "n_new")},
+        "metrics": metrics,
+    }
+    if note:
+        record["note"] = note
+    d = load_trajectory(area)
+    d["records"].append(record)
+    save_trajectory(area, d)
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Comparison: newest record vs its predecessor, headline budget
+# ---------------------------------------------------------------------------
+
+
+def compare(area: str, *, budget: float = DEFAULT_BUDGET) -> List[str]:
+    """Return over-budget regression messages ([] = within budget)."""
+    records = load_trajectory(area)["records"]
+    if len(records) < 2:
+        print(f"BENCH_{area}: {len(records)} record(s), nothing to compare")
+        return []
+    prev, cur = records[-2], records[-1]
+    if prev.get("spec") != cur.get("spec"):
+        print(f"BENCH_{area}: spec changed between records "
+              f"({prev.get('sha')} -> {cur.get('sha')}), comparison skipped")
+        return []
+    regressions: List[str] = []
+    for name, direction in HEADLINE[area].items():
+        a = float(prev["metrics"].get(name, 0.0))
+        b = float(cur["metrics"].get(name, 0.0))
+        if a <= 0.0:  # metric's first landing (or degenerate): inform only
+            print(f"BENCH_{area}/{name}: no baseline ({a} -> {b})")
+            continue
+        delta = (b - a) / a
+        regressed = delta > budget if direction == "down" \
+            else delta < -budget
+        arrow = f"{a:.6g} -> {b:.6g} ({delta:+.1%})"
+        if regressed:
+            regressions.append(
+                f"BENCH_{area}/{name}: {arrow} exceeds the "
+                f"{budget:.0%} budget ({'lower' if direction == 'down' else 'higher'}"
+                " is better)")
+        else:
+            print(f"BENCH_{area}/{name}: {arrow} ok")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_a = sub.add_parser("append", help="distill a Report into a record")
+    ap_a.add_argument("--area", required=True, choices=sorted(HEADLINE))
+    ap_a.add_argument("--report", required=True,
+                      help="Report JSON to distill (must validate)")
+    ap_a.add_argument("--sha", default="", help="override the git sha")
+    ap_a.add_argument("--note", default="")
+    ap_c = sub.add_parser("compare", help="newest record vs predecessor")
+    ap_c.add_argument("--area", required=True, choices=sorted(HEADLINE))
+    ap_c.add_argument("--budget", type=float, default=DEFAULT_BUDGET,
+                      help=f"fractional regression budget "
+                           f"(default {DEFAULT_BUDGET})")
+    ap_c.add_argument("--warn-only", action="store_true",
+                      help="report over-budget regressions but exit 0 "
+                           "(the posture for a metric's first landings)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "append":
+        rec = append_record(args.area, args.report,
+                            sha=args.sha or None, note=args.note)
+        print(f"BENCH_{args.area}: appended {rec['sha']} "
+              f"{json.dumps(rec['metrics'])}")
+        return 0
+
+    regressions = compare(args.area, budget=args.budget)
+    for r in regressions:
+        print(("WARN " if args.warn_only else "FAIL ") + r, file=sys.stderr)
+    return 0 if (not regressions or args.warn_only) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

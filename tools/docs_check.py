@@ -6,9 +6,10 @@ Two checks, both CI-enforced (.github/workflows/ci.yml `docs-check` job):
    the root *.md files must resolve to an existing file (anchors are
    stripped; external http(s)/mailto links are skipped).
 2. **Snippets**: the ``python`` code blocks embedded in
-   ``docs/tuning_guide.md`` execute top to bottom in one namespace, like a
-   notebook — the guide's walkthrough is run, not just rendered.  Sized for
-   CPU (--quick-scale configs inside the doc itself).
+   ``docs/tuning_guide.md`` and ``docs/observability.md`` execute top to
+   bottom in one namespace (per doc), like a notebook — each guide's
+   walkthrough is run, not just rendered.  Sized for CPU (--quick-scale
+   configs inside the docs themselves).
 
     PYTHONPATH=src python tools/docs_check.py [--links-only]
 """
@@ -27,7 +28,7 @@ REPO = Path(__file__).resolve().parent.parent
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
-SNIPPET_DOCS = ("docs/tuning_guide.md",)
+SNIPPET_DOCS = ("docs/tuning_guide.md", "docs/observability.md")
 
 
 def iter_doc_files():
