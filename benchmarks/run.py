@@ -12,7 +12,8 @@ import sys
 import time
 
 ALL = ("table2", "fig2", "fig3", "fig4", "lemma32", "sync", "sweep",
-       "autotune", "ilp", "dryrun", "roofline", "telemetry")
+       "autotune", "ilp", "dryrun", "roofline", "telemetry",
+       "serve_continuous")
 
 
 def main() -> None:
@@ -24,7 +25,8 @@ def main() -> None:
     which = [w.strip() for w in args.only.split(",") if w.strip()]
     if args.fast:
         which = [w for w in which if w not in ("fig2", "fig3", "fig4", "sync",
-                                               "autotune", "telemetry")]
+                                               "autotune", "telemetry",
+                                               "serve_continuous")]
 
     csv_rows = []
     t0 = time.time()
@@ -53,6 +55,8 @@ def main() -> None:
             from benchmarks import roofline as m
         elif name == "telemetry":
             from benchmarks import telemetry as m
+        elif name == "serve_continuous":
+            from benchmarks import serve_continuous as m
         else:
             print(f"unknown benchmark {name!r}", file=sys.stderr)
             continue

@@ -1,0 +1,159 @@
+"""Continuous-vs-static serving benchmark cell — the PR's headline claim,
+measured and asserted.
+
+Runs the same seeded ragged workload through both serving runtimes
+(``Session.serve`` with ``serve_mode="continuous"`` and ``"static"``) and
+checks, hard:
+
+1. token streams are bit-identical between the runtimes (the paged KV
+   round-trip changes the schedule, never the numbers),
+2. the continuous scheduler computes exactly ``sum(n_new)`` decode-token
+   steps (zero waste) while the static one computes
+   ``sum(len(batch) * max(n_new))`` — strictly more on a ragged workload,
+3. continuous measured tokens/s strictly exceeds static on the same
+   workload (the wall-clock consequence of 2).
+
+The continuous Report lands in ``results/serve_continuous_report.json``
+and one record per run is appended to ``BENCH_serve.json`` via
+``tools/bench_trajectory.py`` (this cell owns the serve ledger; the
+telemetry cell owns ``BENCH_train.json``).
+
+    PYTHONPATH=src python -m benchmarks.serve_continuous [--quick] \
+        [--no-bench-append]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _bench(args) -> dict:
+    from repro.api import JobSpec, Session
+
+    base = JobSpec(arch=args.arch, reduced=True, shape="decode_32k",
+                   requests=args.requests, n_new=args.n_new,
+                   s_max=args.s_max, max_batch=args.max_batch,
+                   seed=args.seed, arrival=args.arrival)
+    runs = {}
+    for mode in ("static", "continuous"):
+        rep = Session(base.replace(serve_mode=mode)).serve()
+        sv = rep.measured["serving"]
+        runs[mode] = (rep, sv)
+        print(f"{mode:>10}: {rep.measured['n_tokens']} tokens "
+              f"{rep.measured['tokens_per_s']:8.1f} tok/s  "
+              f"decode-steps {sv['throughput']['decode_token_steps']:4d} "
+              f"(wasted {sv['throughput']['wasted_decode_steps']}), "
+              f"p99 {sv['latency_s']['p99'] * 1e3:.0f} ms")
+    crep, csv_ = runs["continuous"]
+    srep, ssv = runs["static"]
+
+    # 1. same numbers, different schedule
+    heads = [{r["rid"]: r["head"] for r in rep.measured["per_request"]}
+             for rep, _ in runs.values()]
+    assert heads[0] == heads[1], "token streams differ between runtimes"
+
+    # 2. decode-work accounting: continuous == sum(n_new), static strictly
+    # more (it decodes every row for the batch max)
+    c_steps = csv_["throughput"]["decode_token_steps"]
+    s_steps = ssv["throughput"]["decode_token_steps"]
+    delivered = crep.measured["n_tokens"]
+    assert c_steps == delivered, \
+        f"continuous computed {c_steps} != delivered {delivered}"
+    assert csv_["throughput"]["wasted_decode_steps"] == 0
+    assert c_steps < s_steps, \
+        f"continuous {c_steps} decode steps not < static {s_steps}"
+
+    # 3. the wall-clock consequence
+    c_tps = crep.measured["tokens_per_s"]
+    s_tps = srep.measured["tokens_per_s"]
+    assert c_tps > s_tps, \
+        f"continuous {c_tps:.1f} tok/s not > static {s_tps:.1f}"
+
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    report_path = outdir / "serve_continuous_report.json"
+    crep.save(report_path)
+    summary = {
+        "continuous_tokens_per_s": c_tps,
+        "static_tokens_per_s": s_tps,
+        "speedup": c_tps / s_tps,
+        "decode_steps_saved": s_steps - c_steps,
+        "kv_peak_occupancy": csv_["kv_cache"]["peak_occupancy"],
+        "latency_p99_s": csv_["latency_s"]["p99"],
+        "replicas_predicted": csv_["replica_lemma"]["predicted"]["replicas"],
+        "report": str(report_path),
+    }
+    (outdir / "serve_continuous_summary.json").write_text(
+        json.dumps(summary, indent=2))
+    print(f"continuous/static speedup {summary['speedup']:.2f}x, "
+          f"{summary['decode_steps_saved']} decode steps saved, "
+          f"report {report_path}")
+
+    if args.bench_append:
+        tool = str(REPO / "tools" / "bench_trajectory.py")
+        for cmd in (["append", "--area", "serve", "--report",
+                     str(report_path)],
+                    ["compare", "--area", "serve", "--warn-only"]):
+            r = subprocess.run([sys.executable, tool] + cmd, cwd=str(REPO),
+                               env=dict(os.environ,
+                                        PYTHONPATH=str(REPO / "src")))
+            if r.returncode != 0:
+                raise SystemExit(f"bench_trajectory {cmd} failed")
+    return summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--n-new", type=int, default=24)
+    ap.add_argument("--s-max", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival", default="",
+                    help="arrival trace spec for the continuous run")
+    ap.add_argument("--outdir", default="results")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI setting: fewer requests, shorter generations")
+    ap.add_argument("--no-bench-append", dest="bench_append",
+                    action="store_false", default=True,
+                    help="skip appending to BENCH_serve.json")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.requests, args.n_new, args.s_max = 5, 16, 96
+
+    # without the cpu pin, jax probes the TPU backend (libtpu is installed)
+    # and stalls in GCP-metadata retries on non-TPU hosts
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    return _bench(args)
+
+
+def run(csv_rows):
+    """Harness entry (``python -m benchmarks.run --only serve_continuous``):
+    re-exec so the env pins apply before jax initializes."""
+    print("\n== serve_continuous: in-flight batching vs FIFO batches ==")
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=str(REPO / "src"))
+    r = subprocess.run([sys.executable, "-m", "benchmarks.serve_continuous",
+                        "--quick"], env=env, cwd=str(REPO))
+    if r.returncode != 0:
+        print("serve_continuous benchmark failed", file=sys.stderr)
+        return
+    summary = json.loads((REPO / "results" /
+                          "serve_continuous_summary.json").read_text())
+    csv_rows.append(("serve_continuous/tokens_per_s",
+                     summary["continuous_tokens_per_s"],
+                     f"{summary['speedup']:.2f}x over static"))
+    csv_rows.append(("serve_continuous/decode_steps_saved",
+                     summary["decode_steps_saved"],
+                     f"p99 {summary['latency_p99_s'] * 1e3:.0f} ms"))
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,10 @@ SCHEMA_ID = "repro.api/report/v1"
 # repro.core.autotune.TUNING_SCHEMA_ID mirrors this literal — layering keeps
 # core from importing api)
 TUNING_SCHEMA_ID = "repro.api/tuning/v1"
+# the serving runtime's section under measured["serving"] (Session.serve
+# emits it; repro.serve mirrors nothing — the literal lives here and the
+# serve layer stays unimported, same layering rule as TUNING_SCHEMA_ID)
+SERVING_SCHEMA_ID = "repro.api/serving/v1"
 KINDS = ("plan", "dryrun", "train", "serve", "bench", "tune")
 
 # kinds whose `measured` section must be populated, and the keys that make a
@@ -41,7 +45,7 @@ _MEASURED_REQUIRED = {
     "train": ("steps", "loss_last", "tokens_per_s", "r_o", "step_times_mean",
               "metrics"),
     "bench": ("tokens_per_s", "metrics"),
-    "serve": ("requests", "tokens_per_s", "metrics"),
+    "serve": ("requests", "tokens_per_s", "metrics", "serving"),
     "tune": ("tuning",),
 }
 # any report carrying a tuning section (kind "tune", or a train run that
@@ -124,6 +128,8 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
                  f"measured missing {key!r} for kind {d['kind']!r}")
     if "tuning" in d["measured"]:
         _validate_tuning(d["measured"]["tuning"])
+    if "serving" in d["measured"]:
+        _validate_serving(d["measured"]["serving"])
     if "sync" in d["measured"]:
         _validate_sync(d["measured"]["sync"])
     if "metrics" in d["measured"]:
@@ -160,6 +166,52 @@ def _validate_sync(s: Any):
     _require(float(s["exposed_comm_time"])
              <= float(s["measured_comm_s"]) + 1e-12,
              "sync.exposed_comm_time exceeds the serial measured_comm_s")
+
+
+# the ``repro.api/serving/v1`` section: scheduler configuration, KV-block
+# occupancy, the latency distribution, throughput accounting, the SLO
+# verdict, and the replica lemma's prediction next to the measurement it
+# came from (see docs/serving.md and docs/schemas.md)
+_SERVING_REQUIRED = ("schema", "mode", "scheduler", "kv_cache", "latency_s",
+                     "throughput", "slo", "replica_lemma")
+_SERVING_SUBKEYS = {
+    "scheduler": ("max_batch", "requests", "arrival"),
+    "kv_cache": ("block_size", "n_blocks", "peak_blocks", "peak_occupancy",
+                 "block_bytes"),
+    "latency_s": ("p50", "p95", "p99", "mean", "max"),
+    "throughput": ("tokens_per_s", "decode_token_steps",
+                   "wasted_decode_steps", "engine_steps"),
+    "slo": ("slo_s", "attained"),
+    "replica_lemma": ("predicted", "measured"),
+}
+_SERVING_MODES = ("continuous", "static")
+
+
+def _validate_serving(s: Any):
+    """Schema check for the ``repro.api/serving/v1`` section."""
+    _require(isinstance(s, dict),
+             f"measured.serving must be a dict, got {type(s).__name__}")
+    _require(s.get("schema") == SERVING_SCHEMA_ID,
+             f"serving schema {s.get('schema')!r} != {SERVING_SCHEMA_ID!r}")
+    for key in _SERVING_REQUIRED:
+        _require(key in s, f"serving missing {key!r}")
+    for sect, keys in _SERVING_SUBKEYS.items():
+        _require(isinstance(s[sect], dict), f"serving.{sect} must be a dict, "
+                 f"got {type(s[sect]).__name__}")
+        for key in keys:
+            _require(key in s[sect], f"serving.{sect} missing {key!r}")
+    _require(s["mode"] in _SERVING_MODES,
+             f"serving.mode {s['mode']!r} not in {_SERVING_MODES}")
+    occ = s["kv_cache"]["peak_occupancy"]
+    _require(isinstance(occ, (int, float)) and 0.0 <= occ <= 1.0,
+             f"serving.kv_cache.peak_occupancy must be in [0, 1], got {occ!r}")
+    lat = s["latency_s"]
+    _require(float(lat["p50"]) <= float(lat["p99"]) + 1e-12,
+             "serving.latency_s p50 exceeds p99")
+    _require(float(lat["p99"]) <= float(lat["max"]) + 1e-12,
+             "serving.latency_s p99 exceeds max")
+    _require("replicas" in s["replica_lemma"]["predicted"],
+             "serving.replica_lemma.predicted missing 'replicas'")
 
 
 def _validate_tuning(t: Any):

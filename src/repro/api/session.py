@@ -290,8 +290,144 @@ class Session:
                             meta_extra=self._save_trace(kind, tracer))
 
     def serve(self) -> Report:
-        """Batched generation: synthetic ragged requests through the
-        Engine/BatchScheduler, measured end to end."""
+        """Batched generation, measured end to end.  ``spec.serve_mode``
+        picks the runtime: ``continuous`` (in-flight batching over the
+        paged KV cache — ``repro.serve.continuous``) or ``static`` (the
+        FIFO Engine/BatchScheduler).  Both emit the same measured keys
+        plus the ``repro.api/serving/v1`` section, so the two runtimes
+        are directly comparable artifacts."""
+        if self.spec.serve_mode == "continuous":
+            return self._serve_continuous()
+        return self._serve_static()
+
+    def _serve_workload(self):
+        """The seeded synthetic workload both serve modes share: ragged
+        prompt lengths in [8, 48) and ragged ``n_new`` in
+        [max(1, n_new/4), n_new] — raggedness is what separates the two
+        schedulers, so it is the spec, not an option."""
+        spec, cfg = self.spec, self.cfg
+        rng = np.random.default_rng(spec.seed)
+        k = cfg.num_codebooks
+        reqs = []
+        for _ in range(spec.requests):
+            n = int(rng.integers(8, 48))
+            n_new = int(rng.integers(max(1, spec.n_new // 4),
+                                     spec.n_new + 1))
+            shape = (n, k) if k else (n,)
+            prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
+            reqs.append((prompt, n, n_new))
+        return reqs
+
+    def kv_pool_blocks(self) -> int:
+        """KV pool size: ``spec.max_kv_blocks`` when pinned, else the
+        Eq. 5 analogue (``memory_model.max_kv_blocks`` on this mesh's
+        chip, calibration-overlaid) capped at this run's working set
+        (``max_batch`` full-length rows — reduced smoke configs would
+        otherwise derive pools of millions of blocks)."""
+        spec = self.spec
+        if spec.max_kv_blocks:
+            return spec.max_kv_blocks
+        cap = spec.max_batch * math.ceil(spec.s_max / spec.kv_block)
+        derived = mm.max_kv_blocks(self.cfg, self.mesh_spec.chip.hbm_bytes,
+                                   block_size=spec.kv_block,
+                                   max_batch=spec.max_batch)
+        return min(derived, cap) if derived > 0 else cap
+
+    @staticmethod
+    def _latency_stats(latencies) -> Dict[str, float]:
+        xs = np.asarray(sorted(latencies), float)
+        return {"p50": float(np.percentile(xs, 50)),
+                "p95": float(np.percentile(xs, 95)),
+                "p99": float(np.percentile(xs, 99)),
+                "mean": float(xs.mean()), "max": float(xs.max())}
+
+    def _serving_section(self, *, mode: str, kv_stats: Dict[str, Any],
+                         latencies, stats: Dict[str, Any], wall: float,
+                         n_tokens: int, n_news, lengths,
+                         metrics) -> Dict[str, Any]:
+        """The ``repro.api/serving/v1`` block: measured distribution +
+        the inference replica lemma's prediction next to it."""
+        from repro.api.report import SERVING_SCHEMA_ID
+
+        spec = self.spec
+        lat = self._latency_stats(latencies)
+        tps = n_tokens / max(wall, 1e-9)
+        # measured per-step decode time (the lemma's t_step, observed)
+        dh = metrics.histogram("serve/decode_s")
+        t_step_meas = dh.sum / dh.count if dh.count else 0.0
+        ph = metrics.histogram("serve/prefill_s")
+        t_pre_meas = ph.sum / ph.count if ph.count else 0.0
+        # predicted t_step from the cost model: decode is HBM-bound —
+        # stream bf16 weights + the resident KV once per step (priced on
+        # this session's chip, calibration-overlaid when present)
+        chip = self.mesh_spec.chip
+        param_bytes = 2.0 * mm.n_params(self.cfg)
+        kv_bytes = spec.max_batch * spec.s_max * mm.kv_token_bytes(self.cfg)
+        t_step_pred = ps_lib.decode_step_time(param_bytes, kv_bytes,
+                                              chip.hbm_bw)
+        mean_prompt = float(np.mean(list(lengths)))
+        mean_n_new = float(np.mean(list(n_news)))
+        # prefill prediction: per-token memory-bound like decode (crude
+        # but unit-consistent; the measured column sits right next to it)
+        t_pre_pred = mean_prompt * t_step_pred / max(spec.max_batch, 1)
+        slo_s = spec.slo_ms / 1e3 if spec.slo_ms else 2.0 * lat["mean"]
+        t_svc_pred = ps_lib.service_time(t_pre_pred, int(round(mean_n_new)),
+                                         t_step_pred)
+        # offered load for the lemma: spec-pinned, else 2x one replica
+        rate = spec.arrival_rate or 2.0 * spec.max_batch / max(t_svc_pred,
+                                                               1e-9)
+        predicted = ps_lib.serve_replica_plan(
+            arrival_rate=rate, t_prefill_s=t_pre_pred,
+            t_step_s=t_step_pred, n_new=int(round(mean_n_new)),
+            batch=spec.max_batch, slo_s=slo_s)
+        return {
+            "schema": SERVING_SCHEMA_ID,
+            "mode": mode,
+            "scheduler": {
+                "max_batch": spec.max_batch,
+                "requests": spec.requests,
+                "arrival": spec.arrival,
+                "prefill_chunk": spec.prefill_chunk,
+            },
+            "kv_cache": kv_stats,
+            "latency_s": lat,
+            "throughput": {
+                "tokens_per_s": tps,
+                "decode_token_steps": int(stats.get("decode_token_steps", 0)),
+                "wasted_decode_steps": int(stats.get("wasted_decode_steps", 0)),
+                "engine_steps": int(stats.get("engine_steps", 0)),
+                "delivered_tokens": int(stats.get("delivered_tokens",
+                                                  n_tokens)),
+            },
+            "slo": {"slo_s": slo_s, "attained": bool(lat["p99"] <= slo_s)},
+            "replica_lemma": {
+                "predicted": predicted,
+                "measured": {
+                    "t_step_s": t_step_meas,
+                    "t_prefill_s": t_pre_meas,
+                    "t_service_s": lat["mean"],
+                    "tokens_per_s": tps,
+                },
+            },
+        }
+
+    @staticmethod
+    def _per_request(results, latencies) -> List[Dict[str, Any]]:
+        out = []
+        for rid in sorted(results):
+            toks = np.asarray(results[rid])
+            head = toks[:8].tolist() if toks.ndim == 1 else toks[:2].tolist()
+            out.append({"rid": rid, "tokens": int(toks.shape[0]),
+                        "head": head,
+                        "latency_s": float(latencies.get(rid, 0.0))})
+        return out
+
+    _STATIC_KV_STATS = {"block_size": 0, "n_blocks": 0, "used_blocks": 0,
+                        "peak_blocks": 0, "peak_occupancy": 0.0,
+                        "shared_block_hits": 0, "block_bytes": 0.0}
+
+    def _serve_static(self) -> Report:
+        """The FIFO Engine/BatchScheduler runtime (linear cache)."""
         from repro.models.blocks import RunConfig
         from repro.serve.engine import BatchScheduler, Engine
 
@@ -301,29 +437,24 @@ class Session:
         eng = Engine(cfg, run, s_max=spec.s_max, seed=spec.seed,
                      tracer=tracer, metrics=metrics)
         sched = BatchScheduler(eng, max_batch=spec.max_batch)
-        rng = np.random.default_rng(spec.seed)
-        k = cfg.num_codebooks
-        lengths = []
-        for _ in range(spec.requests):
-            n = int(rng.integers(8, 48))
-            shape = (n, k) if k else (n,)
-            sched.submit(
-                rng.integers(0, cfg.vocab_size, shape).astype(np.int32),
-                spec.n_new)
+        lengths, n_news = [], []
+        for prompt, n, n_new in self._serve_workload():
+            sched.submit(prompt, n_new)
             lengths.append(n)
+            n_news.append(n_new)
         t0 = time.perf_counter()
         results = sched.run()
         wall = time.perf_counter() - t0
-        per_request = []
-        for rid in sorted(results):
-            toks = np.asarray(results[rid])
-            head = toks[:8].tolist() if toks.ndim == 1 else toks[:2].tolist()
-            per_request.append({"rid": rid, "tokens": int(toks.shape[0]),
-                                "head": head})
+        per_request = self._per_request(results, sched.latencies)
         n_tokens = sum(r["tokens"] for r in per_request)
         metrics.set_gauge("serve/wall_s", wall)
         metrics.set_gauge("serve/delivered_tokens_per_s",
                           n_tokens / max(wall, 1e-9))
+        serving = self._serving_section(
+            mode="static", kv_stats=dict(self._STATIC_KV_STATS),
+            latencies=list(sched.latencies.values()), stats=sched.stats,
+            wall=wall, n_tokens=n_tokens, n_news=n_news, lengths=lengths,
+            metrics=metrics)
         measured = {
             "requests": spec.requests,
             "n_new": spec.n_new,
@@ -333,6 +464,62 @@ class Session:
             "tokens_per_s": n_tokens / max(wall, 1e-9),
             "batches": [g.stats() for g in sched.history],
             "per_request": per_request,
+            "serving": serving,
+            "metrics": metrics.section(),
+        }
+        return self._report("serve", measured, self._predicted(),
+                            meta_extra=self._save_trace("serve", tracer))
+
+    def _serve_continuous(self) -> Report:
+        """In-flight batching over the paged KV cache, admission gated by
+        the Eq. 5 block bound (``repro.serve.continuous``)."""
+        from repro.models.blocks import RunConfig
+        from repro.serve.arrivals import make_trace
+        from repro.serve.continuous import (ContinuousEngine,
+                                            ContinuousScheduler)
+        from repro.serve.kvcache import PagedKVCache
+
+        spec, cfg = self.spec, self.cfg
+        run = RunConfig(attn_impl="dense", remat="none")
+        tracer, metrics = self._make_obs()
+        eng = ContinuousEngine(cfg, run, s_max=spec.s_max,
+                               max_batch=spec.max_batch,
+                               prefill_chunk=spec.prefill_chunk,
+                               seed=spec.seed, tracer=tracer,
+                               metrics=metrics)
+        n_blocks = self.kv_pool_blocks()
+        kv = PagedKVCache(cfg, block_size=spec.kv_block, n_blocks=n_blocks,
+                          s_max=spec.s_max)
+        sched = ContinuousScheduler(eng, kv)
+        arrivals = make_trace(spec.arrival, spec.requests, seed=spec.seed)
+        lengths, n_news = [], []
+        for (prompt, n, n_new), step in zip(self._serve_workload(),
+                                            arrivals):
+            sched.submit(prompt, n_new, arrival_step=step)
+            lengths.append(n)
+            n_news.append(n_new)
+        t0 = time.perf_counter()
+        results = sched.run()
+        wall = time.perf_counter() - t0
+        per_request = self._per_request(results, sched.latencies)
+        n_tokens = sum(r["tokens"] for r in per_request)
+        metrics.set_gauge("serve/wall_s", wall)
+        metrics.set_gauge("serve/delivered_tokens_per_s",
+                          n_tokens / max(wall, 1e-9))
+        serving = self._serving_section(
+            mode="continuous", kv_stats=kv.stats(),
+            latencies=list(sched.latencies.values()), stats=sched.stats,
+            wall=wall, n_tokens=n_tokens, n_news=n_news, lengths=lengths,
+            metrics=metrics)
+        measured = {
+            "requests": spec.requests,
+            "n_new": spec.n_new,
+            "prompt_lengths": lengths,
+            "n_tokens": n_tokens,
+            "wall_s": wall,
+            "tokens_per_s": n_tokens / max(wall, 1e-9),
+            "per_request": per_request,
+            "serving": serving,
             "metrics": metrics.section(),
         }
         return self._report("serve", measured, self._predicted(),

@@ -68,6 +68,18 @@ class JobSpec:
     max_batch: int = 4            # scheduler batch size
     n_new: int = 16               # tokens generated per request
     requests: int = 6             # synthetic request count
+    serve_mode: str = "continuous"  # continuous (in-flight batching, paged
+                                  # KV) | static (FIFO BatchScheduler)
+    kv_block: int = 16            # paged-KV block size [tokens]
+    max_kv_blocks: int = 0        # KV pool cap; 0 = derive from the Eq. 5
+                                  # analogue (memory_model.max_kv_blocks)
+    prefill_chunk: int = 0        # chunked prefill size; 0 = whole-prompt
+    arrival: str = ""             # arrival trace spec ("" | poisson:RATE |
+                                  # burst:NxGAP), see repro.serve.arrivals
+    slo_ms: float = 0.0           # per-request latency SLO for the replica
+                                  # lemma; 0 = 2x the measured mean latency
+    arrival_rate: float = 0.0     # offered load [req/s] for the lemma;
+                                  # 0 = 2x one replica's capacity
 
     def __post_init__(self):
         if self.arch not in ARCH_IDS:
@@ -86,9 +98,21 @@ class JobSpec:
             raise ValueError(f"compress must be one of {COMPRESSIONS}, "
                              f"got {self.compress!r}")
         for name in ("steps", "batch", "seq", "s_max", "max_batch", "n_new",
-                     "requests", "tune_steps"):
+                     "requests", "tune_steps", "kv_block"):
             if getattr(self, name) <= 0:
                 raise ValueError(f"{name} must be > 0")
+        if self.serve_mode not in ("continuous", "static"):
+            raise ValueError(f"serve_mode must be 'continuous' or 'static', "
+                             f"got {self.serve_mode!r}")
+        for name in ("max_kv_blocks", "prefill_chunk"):
+            if getattr(self, name) < 0:
+                raise ValueError(f"{name} must be >= 0")
+        if self.slo_ms < 0 or self.arrival_rate < 0:
+            raise ValueError("slo_ms and arrival_rate must be >= 0")
+        if self.arrival:
+            # numpy-only module: safe to import from a backend-free spec
+            from repro.serve.arrivals import parse_trace
+            parse_trace(self.arrival)  # raises ValueError on a bad spec
         if self.dp < 0:
             raise ValueError("dp must be >= 0 (0 = single-process loop)")
         if self.bucket_mb < 0:

@@ -285,3 +285,68 @@ def decode_memory(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
     logits = B / batch_shard * cfg.padded_vocab * 4 / tp
     act = B / batch_shard * cfg.d_model * 2 * 8
     return TransformerMemory(params, 0.0, 0.0, act, logits, kv_per_chip)
+
+
+# ---------------------------------------------------------------------------
+# Part 3 — serving memory bound (Eq. 5 for the paged KV cache)
+# ---------------------------------------------------------------------------
+# Training sizes the minibatch as the largest x_mini with
+# M(x_mini) <= M_bound (Eq. 5 / max_x_mini / max_microbatch).  Serving has
+# the same shape: KV blocks are the unit of allocation, so the admission
+# bound is the largest block count whose pool fits what is left of HBM
+# after weights, per-request recurrent state, and decode workspace.
+
+
+def kv_token_bytes(cfg: ModelConfig, *, dtype_bytes: int = 2) -> float:
+    """Paged-cache bytes per cached token position across the stack
+    (attention-like slots; a *paged* cache stores every position linearly,
+    so sliding windows don't discount — the window bounds reads, not
+    residency)."""
+    cycles = M.main_cycles(cfg)
+    per = 0.0
+    for s in cfg.pattern:
+        if s.mixer == "mamba":
+            continue
+        per += cycles * cfg.kv_cache_width * dtype_bytes
+    if cfg.first_k_dense and cfg.pattern[0].mixer != "mamba":
+        per += cfg.first_k_dense * cfg.kv_cache_width * dtype_bytes
+    return per
+
+
+def request_state_bytes(cfg: ModelConfig, *, dtype_bytes: int = 2) -> float:
+    """Per-request bytes that are NOT paged: Mamba recurrent state and conv
+    tail are constant-size per sequence, resident for the whole request."""
+    cycles = M.main_cycles(cfg)
+    per = 0.0
+    for s in cfg.pattern:
+        if s.mixer != "mamba":
+            continue
+        per += cycles * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * dtype_bytes
+        per += cycles * (cfg.ssm_conv_width - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * dtype_bytes
+    return per
+
+
+def kv_block_bytes(cfg: ModelConfig, block_size: int) -> float:
+    """Bytes of one KV block across every paged pool."""
+    return block_size * kv_token_bytes(cfg)
+
+
+def max_kv_blocks(cfg: ModelConfig, hbm_bytes: float, *, block_size: int,
+                  max_batch: int = 1, frac: float = 0.9) -> int:
+    """Eq. 5 for serving: the largest KV block-pool size that fits.
+
+        n_blocks = floor((frac·HBM − M_params − M_state − M_work) / M_block)
+
+    with bf16 weights resident, ``max_batch`` requests of recurrent state,
+    and a decode workspace (f32 logits row + activation slack) per row.
+    Returns 0 when even the fixed costs exceed the budget or the config has
+    no paged (attention) cache at all.
+    """
+    bb = kv_block_bytes(cfg, block_size)
+    if bb <= 0:
+        return 0
+    params = 2.0 * n_params(cfg)
+    state = max_batch * request_state_bytes(cfg)
+    work = max_batch * (cfg.padded_vocab * 4.0 + cfg.d_model * 2.0 * 8)
+    bound = frac * hbm_bytes - params - state - work
+    return max(int(bound // bb), 0)

@@ -349,3 +349,90 @@ def grad_sync_plan(param_bytes: float, dp_tiers: Sequence[Tier], t_c: float,
                                    masked=flat_time <= t_c)
     bottleneck = min(spanning, key=lambda t: t.bw).name
     return dataclasses.replace(flat, bottleneck_tier=bottleneck)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.2 for inference — replica sizing against a latency SLO
+# ---------------------------------------------------------------------------
+# The training lemma sizes servers so I/O hides behind compute.  Serving has
+# the same structure with the roles renamed: the "step time" is one decode
+# step (HBM-bound weight + KV traffic), the "budget" is the latency SLO, and
+# the sized resource is replicas instead of parameter servers.
+#
+# Model: each replica is an M/D/1 queue (Poisson arrivals at rate
+# lambda/N_rep, deterministic service T_svc / batch).  Mean wait
+# W_q = rho * T_svc / (2 * (1 - rho)); requiring W_q <= slack = SLO - T_svc
+# gives the utilization ceiling rho* = x / (1 + x) with x = 2*slack/T_svc,
+# and hence  N_rep = ceil(lambda * T_svc / (batch * rho*)).
+
+
+def decode_step_time(param_bytes: float, kv_bytes: float, hbm_bw: float) -> float:
+    """One decode step is HBM-bound: stream weights + resident KV once.
+    param_bytes/kv_bytes in bytes, hbm_bw in bytes/s -> seconds."""
+    if hbm_bw <= 0:
+        raise ValueError("hbm_bw > 0")
+    return (param_bytes + kv_bytes) / hbm_bw
+
+
+def service_time(t_prefill: float, n_new: int, t_step: float) -> float:
+    """End-to-end service time for one request: prefill + n_new decode steps.
+    (The prefill samples the first token, so n_new-1 further steps would be
+    exact; we keep n_new as a half-step of slack for sampling overhead.)"""
+    return t_prefill + n_new * t_step
+
+
+def md1_wait(rho: float, t_svc: float) -> float:
+    """M/D/1 mean queueing delay at utilization rho (0 <= rho < 1)."""
+    if not 0 <= rho < 1:
+        raise ValueError("0 <= rho < 1")
+    return rho * t_svc / (2.0 * (1.0 - rho))
+
+
+def serve_utilization_bound(slo_s: float, t_svc: float) -> float:
+    """Largest per-replica utilization rho* with W_q(rho*) <= SLO - T_svc.
+    Returns 0.0 when the SLO is not attainable even on an idle replica
+    (slack <= 0) -- callers must treat 0 as "no finite replica count"."""
+    slack = slo_s - t_svc
+    if slack <= 0 or t_svc <= 0:
+        return 0.0
+    x = 2.0 * slack / t_svc
+    return x / (1.0 + x)
+
+
+def n_replicas(arrival_rate: float, t_svc: float, batch: int,
+               rho_star: float) -> int:
+    """Replica count so each replica runs at <= rho*; ceil'd like Eq. 8."""
+    if rho_star <= 0:
+        raise ValueError("SLO unattainable: rho* <= 0")
+    per_replica = batch * rho_star / t_svc  # sustainable req/s per replica
+    return max(1, math.ceil(arrival_rate / per_replica))
+
+
+def serve_replica_plan(*, arrival_rate: float, t_prefill_s: float,
+                       t_step_s: float, n_new: int, batch: int,
+                       slo_s: float) -> Dict[str, object]:
+    """The inference lemma as a decision, JSON-safe (no inf/nan).
+
+    arrival_rate in requests/s offered to the fleet; slo_s is the p-mean
+    end-to-end latency target.  Returns predicted replicas, the service
+    time, the utilization ceiling, and whether the SLO is attainable at
+    all (slack > 0).
+    """
+    t_svc = service_time(t_prefill_s, n_new, t_step_s)
+    rho_star = serve_utilization_bound(slo_s, t_svc)
+    attainable = rho_star > 0
+    replicas = n_replicas(arrival_rate, t_svc, batch, rho_star) if attainable else 0
+    plan: Dict[str, object] = {
+        "t_service_s": t_svc,
+        "t_step_s": t_step_s,
+        "utilization_bound": rho_star,
+        "replicas": replicas,
+        "attainable": attainable,
+        "arrival_rate": arrival_rate,
+        "slo_s": slo_s,
+    }
+    if attainable:
+        rho = arrival_rate * t_svc / (batch * replicas)
+        plan["utilization"] = rho
+        plan["wait_s"] = md1_wait(min(rho, rho_star), t_svc)
+    return plan

@@ -6,6 +6,17 @@ SPMD decode path performs. Per-example valid length arrives as a (B, 1)
 int32 array (position of the current token; cache entries > pos masked).
 
 Layout: q (B, H, D), k/v (B, KV, S, D).
+
+Two entry points share one kernel body:
+
+* :func:`decode_attention`        — linear per-request caches (B, KV, S, D)
+* :func:`paged_decode_attention`  — a block-pool cache (N, KV, bs, D) plus a
+  per-request block table (B, nb).  The table is a *scalar-prefetch* operand
+  (``PrefetchScalarGridSpec``): the kv grid axis walks logical blocks and the
+  BlockSpec index map translates them to physical pool blocks, so the kernel
+  streams exactly the request's blocks with no gather materialization.
+  With ``bs == kv_block`` both paths run the identical op sequence per
+  block, so their outputs are bit-identical for the same cache content.
 """
 from __future__ import annotations
 
@@ -23,9 +34,11 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
 NEG_INF = -2.0e38
 
 
-def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
-            scale, cap, window, tk, nk):
-    ki = pl.program_id(2)
+def _flash_body(pos, ki, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                scale, cap, window, tk, nk):
+    """One kv-block step of the running-softmax decode, shared by the linear
+    and paged kernels. ``ki`` is the *logical* block index — masking is by
+    logical position, so where the physical block came from is irrelevant."""
 
     @pl.when(ki == 0)
     def _init():
@@ -33,7 +46,6 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    pos = pos_ref[0, 0]
     k_start = ki * tk
     relevant = k_start <= pos
     if window:
@@ -70,6 +82,22 @@ def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, cap, window, tk, nk):
+    _flash_body(pos_ref[0, 0], pl.program_id(2), q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, scale=scale, cap=cap, window=window,
+                tk=tk, nk=nk)
+
+
+def _paged_kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref,
+                  m_ref, l_ref, *, scale, cap, window, tk, nk):
+    # table_ref routed the k/v BlockSpecs; the body only needs the position.
+    del table_ref
+    _flash_body(pos_ref[pl.program_id(0)], pl.program_id(2), q_ref, k_ref,
+                v_ref, o_ref, acc_ref, m_ref, l_ref, scale=scale, cap=cap,
+                window=window, tk=tk, nk=nk)
 
 
 def decode_attention(q, k, v, pos, *, scale: float, window: int = 0,
@@ -111,4 +139,57 @@ def decode_attention(q, k, v, pos, *, scale: float, window: int = 0,
         ),
         interpret=interpret,
     )(pos2, q4, k, v)
+    return out[:, :, 0, :]
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
+                           scale: float, window: int = 0, cap: float = 0.0,
+                           interpret: bool = True):
+    """Flash-decoding over a paged KV cache.
+
+    q (B,H,D); k_pool/v_pool (N,KV,bs,D) — N physical blocks of bs tokens;
+    block_table (B,nb) int32 mapping each request's logical block ki to a
+    physical pool block (entries past the request's length may repeat any
+    valid id — those positions are masked by ``pos``); pos (B,) current
+    position per request.  Returns (B,H,D).
+
+    The table and positions ride in as scalar-prefetch operands so the k/v
+    index maps can dereference the table per grid step — the kernel streams
+    physical blocks directly, no gathered linear copy is materialized.
+    """
+    B, H, D = q.shape
+    KV, bs = k_pool.shape[1], k_pool.shape[2]
+    G = H // KV
+    nb = block_table.shape[1]
+    q4 = q[:, :, None, :]  # (B, H, 1, D)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, cap=cap,
+                               window=window, tk=bs, nk=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, tbl, p: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, ki, tbl, p, g=G: (tbl[b, ki], h // g, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, ki, tbl, p, g=G: (tbl[b, ki], h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, ki, tbl, p: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(pos, jnp.int32),
+      q4, k_pool, v_pool)
     return out[:, :, 0, :]

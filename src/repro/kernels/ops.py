@@ -41,6 +41,31 @@ def decode_attention(q, k, v, pos, *, scale, window=0, cap=0.0):
     return out[:, None]
 
 
+@jax.jit
+def gather_kv_blocks(pool, block_table):
+    """Materialize linear caches from a block pool: pool (N, bs, *tail) and
+    block_table (B, nb) -> (B, nb*bs, *tail).
+
+    The slow-path twin of :func:`paged_decode_attention` — used by the
+    engine's batch-reconstruction path and as the reference the paged kernel
+    is tested bit-identical against."""
+    g = pool[block_table]  # (B, nb, bs, *tail)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "cap"))
+def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *, scale,
+                           window=0, cap=0.0):
+    """q (B,1,H,D), pools (N,bs,KV,D) in model layout, block_table (B,nb),
+    pos (B,) -> (B,1,H,D).  Streams the request's physical blocks via the
+    scalar-prefetched table; no gathered linear cache is materialized."""
+    out = dec_k.paged_decode_attention(
+        q[:, 0], k_pool.transpose(0, 2, 1, 3), v_pool.transpose(0, 2, 1, 3),
+        block_table, pos, scale=scale, window=window, cap=cap,
+        interpret=_interpret())
+    return out[:, None]
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(x, dt, a_neg, b_mat, c_mat, *, chunk=256):
     """Model layout x (B,L,H,P), dt (B,L,H) -> y (B,L,H,P), h (B,H,N,P)."""
@@ -59,7 +84,8 @@ def ssd_scan(x, dt, a_neg, b_mat, c_mat, *, chunk=256):
 # (pallas kernel vs jnp reference, and per-chunk schedules for the scan).
 # `repro.core.autotune` times these and records the fastest feasible one.
 
-TUNABLE_OPS = ("flash_attention", "decode_attention", "ssd_scan")
+TUNABLE_OPS = ("flash_attention", "decode_attention",
+               "paged_decode_attention", "ssd_scan")
 
 
 def tune_inputs(op: str, *, seed: int = 0, batch: int = 1, seq: int = 128,
@@ -78,6 +104,17 @@ def tune_inputs(op: str, *, seed: int = 0, batch: int = 1, seq: int = 128,
         v = jax.random.normal(ks[2], (batch, heads, seq, head_dim))
         pos = jnp.full((batch,), seq - 1, jnp.int32)
         return (q, k, v, pos)
+    if op == "paged_decode_attention":
+        bs = 16
+        nb = max(seq // bs, 1)
+        n_pool = 2 * batch * nb  # half-occupied pool, non-contiguous tables
+        q = jax.random.normal(ks[0], (batch, heads, head_dim))
+        k_pool = jax.random.normal(ks[1], (n_pool, heads, bs, head_dim))
+        v_pool = jax.random.normal(ks[2], (n_pool, heads, bs, head_dim))
+        table = jax.random.permutation(
+            ks[3], n_pool)[: batch * nb].reshape(batch, nb).astype(jnp.int32)
+        pos = jnp.full((batch,), nb * bs - 1, jnp.int32)
+        return (q, k_pool, v_pool, table, pos)
     if op == "ssd_scan":
         x = jax.random.normal(ks[0], (batch, heads, seq, ssm_p))
         dt = jax.nn.softplus(jax.random.normal(ks[1], (batch, heads, seq)))
@@ -108,6 +145,20 @@ def tune_candidates(op: str, *, ssd_chunks=(32, 64, 128)):
                 interpret=_interpret()),
             "ref": lambda q, k, v, pos: _ref().decode_attention_ref(
                 q, k, v, pos, scale=1.0 / (q.shape[-1] ** 0.5)),
+        }
+    if op == "paged_decode_attention":
+        def _gathered(pool, table):
+            # (N,KV,bs,D)[table] -> (B,nb,KV,bs,D) -> linear (B,KV,nb*bs,D)
+            g = pool[table]
+            b, nb, kv, bs, d = g.shape
+            return g.transpose(0, 2, 1, 3, 4).reshape(b, kv, nb * bs, d)
+        return {
+            "pallas": lambda q, kp, vp, tbl, pos: dec_k.paged_decode_attention(
+                q, kp, vp, tbl, pos, scale=1.0 / (q.shape[-1] ** 0.5),
+                interpret=_interpret()),
+            "gather_ref": lambda q, kp, vp, tbl, pos: _ref().decode_attention_ref(
+                q, _gathered(kp, tbl), _gathered(vp, tbl), pos,
+                scale=1.0 / (q.shape[-1] ** 0.5)),
         }
     if op == "ssd_scan":
         def _chunk_variant(c):

@@ -1,10 +1,14 @@
 """Serving launcher — a thin CLI over the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2-27b \
-        [--requests 6] [--n-new 16] [--s-max 256] [--report-out PATH]
+        [--continuous | --static] [--requests 6] [--n-new 16] \
+        [--s-max 256] [--kv-block 16] [--max-kv-blocks 0] \
+        [--prefill-chunk 0] [--arrival-trace poisson:0.5] \
+        [--slo-ms 0] [--report-out PATH]
 
-Flags map onto a :class:`repro.api.JobSpec`; batched generation through the
-Engine/BatchScheduler happens inside :meth:`repro.api.Session.serve`.
+Flags map onto a :class:`repro.api.JobSpec`; generation happens inside
+:meth:`repro.api.Session.serve` — continuous (in-flight batching over the
+paged KV cache, the default) or static (FIFO Engine/BatchScheduler).
 """
 from __future__ import annotations
 
@@ -22,6 +26,26 @@ def main():
     ap.add_argument("--n-new", type=int, default=16)
     ap.add_argument("--s-max", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=4)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--continuous", dest="mode", action="store_const",
+                      const="continuous", default="continuous",
+                      help="in-flight batching over the paged KV cache "
+                           "(default)")
+    mode.add_argument("--static", dest="mode", action="store_const",
+                      const="static",
+                      help="FIFO BatchScheduler with a linear cache")
+    ap.add_argument("--kv-block", type=int, default=16,
+                    help="paged-KV block size [tokens]")
+    ap.add_argument("--max-kv-blocks", type=int, default=0,
+                    help="KV pool cap; 0 = derive from the Eq. 5 analogue")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size; 0 = whole-prompt")
+    ap.add_argument("--arrival-trace", default="",
+                    help="arrival spec: '' | poisson:RATE | burst:NxGAP "
+                         "(repro.serve.arrivals)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="latency SLO for the replica lemma; 0 = 2x the "
+                         "measured mean")
     ap.add_argument("--report-out", default="",
                     help="write the unified Report JSON here")
     ap.add_argument("--trace-dir", default="",
@@ -35,6 +59,10 @@ def main():
     spec = JobSpec(arch=args.arch, reduced=True, shape="decode_32k",
                    requests=args.requests, n_new=args.n_new,
                    s_max=args.s_max, max_batch=args.max_batch,
+                   serve_mode=args.mode, kv_block=args.kv_block,
+                   max_kv_blocks=args.max_kv_blocks,
+                   prefill_chunk=args.prefill_chunk,
+                   arrival=args.arrival_trace, slo_ms=args.slo_ms,
                    trace_dir=args.trace_dir)
     rep = Session(spec).serve()
     m = rep.measured
@@ -52,14 +80,23 @@ def main():
         print(f"wrote {rep.save(args.report_out)}")
     # machine-parseable summary line (tools/bench_trajectory.py reads it)
     hists = m["metrics"]["histograms"]
+    sv = m["serving"]
     summary = {
         "kind": "serve",
+        "mode": sv["mode"],
         "requests": m["requests"],
         "n_tokens": m["n_tokens"],
         "wall_s": m["wall_s"],
         "tokens_per_s": m["tokens_per_s"],
         "decode_p99_s": hists.get("serve/decode_s", {}).get("p99", 0.0),
         "prefill_p99_s": hists.get("serve/prefill_s", {}).get("p99", 0.0),
+        "latency_p99_s": sv["latency_s"]["p99"],
+        "queue_depth_p99": hists.get("serve/queue_depth", {}).get("p99", 0.0),
+        "wasted_decode_steps": sv["throughput"]["wasted_decode_steps"],
+        "kv_peak_occupancy": sv["kv_cache"]["peak_occupancy"],
+        "slo_s": sv["slo"]["slo_s"],
+        "slo_attained": sv["slo"]["attained"],
+        "replicas_predicted": sv["replica_lemma"]["predicted"]["replicas"],
     }
     print(json.dumps(summary))
 

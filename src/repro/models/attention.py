@@ -275,6 +275,45 @@ def gqa_decode(p, x, pos, cache, cfg: ModelConfig, mixer: str,
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
 
 
+def gqa_extend(p, x, pos0, cache, cfg: ModelConfig, mixer: str):
+    """Chunked-prefill extension: append a chunk of C tokens to a *linear*
+    cache.  x (B,C,D); pos0 (B,) absolute position of the chunk's first
+    token; cache dict k/v (B,Smax,KV,hd), non-ring, bf16 (int8-quantized
+    caches are a decode-path option and unsupported here).
+
+    Equivalent to running prefill over prompt[:pos0+C] and keeping the last
+    C outputs: the chunk attends causally to the cache (which holds every
+    earlier position at its own slot) plus itself."""
+    B, C = x.shape[:2]
+    positions = pos0[:, None] + jnp.arange(C)[None]  # (B, C)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    ck = _cache_write_chunk(cache["k"], k, positions)
+    cv = _cache_write_chunk(cache["v"], v, positions)
+    s_cache = ck.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s_cache)[None], (B, s_cache))
+    out = attention(
+        q, ck, cv, positions, k_pos,
+        scale=1.0 / np.sqrt(cfg.head_dim),
+        window=_window_for(cfg, mixer),
+        cap=cfg.attn_softcap,
+        impl="dense",
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": ck, "v": cv}
+
+
+def _cache_write_chunk(cache, new, positions):
+    """Write new (B,C,...) into cache (B,Smax,...) at per-example positions
+    (B,C) — the multi-token scatter behind chunked prefill."""
+    b_idx = jnp.arange(cache.shape[0])[:, None]
+    return cache.at[b_idx, positions].set(new.astype(cache.dtype))
+
+
 def _ring_positions(pos, s_cache: int, window: int, batch: int):
     """Write index + absolute positions held by each cache slot.
 

@@ -162,6 +162,38 @@ def slot_decode(p, h, pos, cache, cfg: ModelConfig, slot: SlotSpec, run: RunConf
     return h, new_cache
 
 
+# ---------------------------------------------------------------------------
+# Extend (multi-token cache append — chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def _mixer_extend(p, h, pos0, cache, cfg, slot: SlotSpec, run: RunConfig):
+    if slot.mixer == "mamba" or slot.mixer.startswith("mla"):
+        raise NotImplementedError(
+            f"chunked prefill is attention-only; {slot.mixer!r} slots use "
+            f"whole-prompt prefill (model.supports_extend gates this)")
+    return attn.gqa_extend(p, h, pos0, cache, cfg, slot.mixer)
+
+
+def slot_extend(p, h, pos0, cache, cfg: ModelConfig, slot: SlotSpec,
+                run: RunConfig):
+    """slot_decode's multi-token sibling: h (B,C,D), pos0 (B,) chunk start."""
+    resid = h
+    u = rms_norm(h, p["mixer_norm"], cfg.norm_eps)
+    u, new_cache = _mixer_extend(p["mixer"], u, pos0, cache, cfg, slot, run)
+    if cfg.use_post_norm:
+        u = rms_norm(u, p["mixer_post_norm"], cfg.norm_eps)
+    h = resid + u
+    if "mlp_norm" in p:
+        resid = h
+        u = rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+        u, _ = _mlp_forward(p["mlp"], u, cfg, slot, run)
+        if cfg.use_post_norm:
+            u = rms_norm(u, p["mlp_post_norm"], cfg.norm_eps)
+        h = resid + u
+    return h, new_cache
+
+
 def slot_cache_specs(cfg: ModelConfig, slot: SlotSpec, layers: int, batch: int,
                      s_max: int, dtype: str = "bfloat16",
                      kv_quant: bool = False):

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, SlotSpec
 from repro.models.blocks import (RunConfig, constrain, slot_cache_specs,
-                                 slot_decode, slot_forward, slot_specs)
+                                 slot_decode, slot_extend, slot_forward,
+                                 slot_specs)
 from repro.models.common import (ParamSpec, cross_entropy, rms_norm, softcap)
 
 
@@ -263,6 +264,64 @@ def decode_step(params, tokens, pos, caches, cfg: ModelConfig, run: RunConfig):
         new_slot_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
     else:
         h, new_slot_caches = jax.lax.scan(cycle, h, stacked)
+    new_caches["slots"] = new_slot_caches
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = lm_logits(params, h, cfg)
+    return logits, new_caches
+
+
+def supports_extend(cfg: ModelConfig) -> bool:
+    """Whether the config can run chunked prefill (``extend_step``):
+    attention-only stacks.  Mamba state folds the whole prefix (no
+    per-position cache to append to) and MLA decodes in absorbed-latent
+    form — both fall back to whole-prompt prefill."""
+    return all(s.mixer in ("attn", "swa") for s in cfg.pattern)
+
+
+def extend_step(params, tokens, pos0, caches, cfg: ModelConfig,
+                run: RunConfig):
+    """Chunked prefill: append C prompt tokens to linear caches in one call.
+
+    tokens (B,C) int32; pos0 (B,) absolute position of the chunk's first
+    token; caches linear (non-ring) as placed by the serving engine.
+    Returns (logits (B,C,V), new_caches) — logits[:, i] is the next-token
+    distribution after absolute position pos0+i, identical to what a
+    whole-prompt ``forward`` yields at that position.
+    """
+    if not supports_extend(cfg):
+        raise NotImplementedError(
+            f"{cfg.name}: chunked prefill needs an attention-only pattern")
+    params = cast_params(params, cfg)
+    h = embed_tokens(params, {"tokens": tokens}, cfg)
+
+    slot_names = [f"slot{i}" for i in range(len(cfg.pattern))]
+    stacked = ({n: params["slots"][n] for n in slot_names},
+               {n: caches["slots"][n] for n in slot_names})
+
+    def cycle(h, xs):
+        cycle_params, cycle_cache = xs
+        out_cache = {}
+        for n, slot in zip(slot_names, cfg.pattern):
+            h, nc = slot_extend(cycle_params[n], h, pos0, cycle_cache[n], cfg,
+                                slot, run)
+            out_cache[n] = nc
+        return h, out_cache
+
+    new_caches: Dict[str, Any] = {}
+    if cfg.first_k_dense:
+        pre_slot = SlotSpec(cfg.pattern[0].mixer, "dense")
+
+        def pre_body(h, xs):
+            layer_params, layer_cache = xs
+            return slot_extend(layer_params, h, pos0, layer_cache, cfg,
+                               pre_slot, run)
+
+        h, new_pre = jax.lax.scan(pre_body, h,
+                                  (params["prelude"], caches["prelude"]))
+        new_caches["prelude"] = new_pre
+
+    h, new_slot_caches = jax.lax.scan(cycle, h, stacked)
     new_caches["slots"] = new_slot_caches
 
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)

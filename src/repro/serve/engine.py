@@ -40,20 +40,26 @@ def _pad_to(x, size: int, axis: int):
     return jnp.pad(x, widths)
 
 
-def place_prefill_cache(cfg: ModelConfig, caches, s_max: int, prompt_len: int):
+def place_prefill_cache(cfg: ModelConfig, caches, s_max: int, prompt_len: int,
+                        *, ring: bool = True):
     """Fit the prefill caches (length = prompt_len) into the allocated
-    buffers: pad linear caches to s_max; fold SWA caches into their ring."""
+    buffers: pad linear caches to s_max; fold SWA caches into their ring.
+
+    ``ring=False`` keeps every sequence cache linear (position i at slot i)
+    even for sliding-window slots — the layout the paged KV cache pages in
+    fixed-size blocks; window masking still bounds what decode attends to.
+    """
 
     def place_slot(slot: SlotSpec, cache):
         if slot.mixer == "mamba":
             return {"state": cache["state"].astype(jnp.bfloat16),
                     "conv": cache["conv"].astype(jnp.bfloat16)}
         window = _window_for(cfg, slot.mixer)
-        ring = bool(window) and window < s_max
+        use_ring = ring and bool(window) and window < s_max
         out = {}
         for name, arr in cache.items():  # arr (cycles, B, S, ...)
             arr = arr.astype(jnp.bfloat16)
-            if not ring:
+            if not use_ring:
                 out[name] = _pad_to(arr, s_max, axis=2)
                 continue
             size = min(s_max, window)
@@ -169,6 +175,10 @@ class Engine:
         if n_new > 1:
             m.observe("serve/decode_token_s", t_decode / (n_new - 1))
         m.inc("serve/tokens", B * n_new)
+        # decode *work* performed: every row runs n_new token steps whether
+        # the request wanted them or not — the continuous scheduler's
+        # regression tests compare this against sum(n_new)
+        m.inc("serve/decode_token_steps", B * n_new)
         m.inc("serve/generate_calls")
         m.set_gauge("serve/tokens_per_s", tps)
         return GenResult(tokens, t_prefill, t_decode, tps)
@@ -192,6 +202,8 @@ class BatchScheduler:
         self.pending: List[Request] = []
         self._next_id = 0
         self.history: List[GenResult] = []  # per-batch stats of the last run()
+        self.stats: Dict[str, Any] = {}  # decode-work accounting of last run()
+        self.latencies: Dict[int, float] = {}  # rid -> completion latency [s]
 
     def submit(self, prompt: np.ndarray, n_new: int) -> int:
         rid = self._next_id
@@ -202,9 +214,12 @@ class BatchScheduler:
     def run(self) -> Dict[int, np.ndarray]:
         results: Dict[int, np.ndarray] = {}
         self.history = []
+        self.latencies = {}
         m = self.engine.metrics
         tracer = self.engine.tracer
         b_idx = 0
+        t_run = 0.0  # cumulative batch wall — each batch waits on the prior
+        computed = delivered = engine_steps = 0
         while self.pending:
             m.observe("serve/queue_depth", len(self.pending))
             batch = self.pending[: self.max_batch]
@@ -225,6 +240,17 @@ class BatchScheduler:
             m.observe("serve/batch_size", len(batch))
             m.inc("serve/requests", len(batch))
             self.history.append(res)
+            t_run += res.prefill_s + res.decode_s
+            computed += len(batch) * n_new
+            delivered += sum(r.n_new for r in batch)
+            engine_steps += n_new
             for i, r in enumerate(batch):
                 results[r.rid] = res.tokens[i, : r.n_new]
+                self.latencies[r.rid] = t_run  # whole batch retires together
+        wasted = computed - delivered
+        m.inc("serve/wasted_decode_steps", wasted)
+        self.stats = {"decode_token_steps": computed,
+                      "delivered_tokens": delivered,
+                      "wasted_decode_steps": wasted,
+                      "engine_steps": engine_steps}
         return results

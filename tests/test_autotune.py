@@ -246,7 +246,7 @@ def test_session_tune_acceptance(tmp_path):
     assert (r["abs_err_calibrated_s"] <= r["abs_err_uncalibrated_s"])
     # every tunable op got a measured winner
     assert set(t["kernels"]) == {"flash_attention", "decode_attention",
-                                 "ssd_scan"}
+                                 "paged_decode_attention", "ssd_scan"}
     assert all(e["chosen"] in e["times_s"] for e in t["kernels"].values())
     # the calibration persisted under backend/cluster/executed-config
     key = Calibration.from_dict(t["calibration"]).key

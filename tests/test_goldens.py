@@ -15,15 +15,16 @@ import pytest
 
 from repro.api import Campaign, validate_report
 from repro.api.report import (_MEASURED_REQUIRED, _PLAN_REQUIRED,
-                              _PREDICTED_REQUIRED, _SPEC_REQUIRED,
+                              _PREDICTED_REQUIRED, _SERVING_REQUIRED,
+                              _SERVING_SUBKEYS, _SPEC_REQUIRED,
                               _SYNC_OVERLAP_REQUIRED, _TUNING_REQUIRED,
-                              KINDS, SCHEMA_ID)
+                              KINDS, SCHEMA_ID, SERVING_SCHEMA_ID)
 from repro.obs.metrics import (HISTOGRAM_KEYS, METRICS_SCHEMA_ID,
                                validate_metrics)
 
 GOLDENS = Path(__file__).resolve().parent / "goldens"
 REPORT_GOLDENS = ("report_v1_plan.json", "report_v1_train.json",
-                  "tuning_v1.json")
+                  "tuning_v1.json", "report_v1_serve.json")
 
 
 def _load(name):
@@ -141,6 +142,52 @@ def test_golden_tuning_rejects_section_mutations():
     d["measured"]["tuning"]["overlap"]["overlap_fraction"] = -0.5
     with pytest.raises(ValueError):
         validate_report(d)
+
+
+def test_goldens_cover_the_serving_fields():
+    """The serve golden exercises this PR's serving/v1 schema — a
+    continuous-mode run with paged-KV occupancy and the replica lemma."""
+    serve = _load("report_v1_serve.json")
+    sv = serve["measured"]["serving"]
+    assert sv["schema"] == SERVING_SCHEMA_ID
+    assert sv["mode"] == "continuous"
+    assert sv["kv_cache"]["peak_blocks"] > 0
+    assert 0.0 < sv["kv_cache"]["peak_occupancy"] <= 1.0
+    assert sv["throughput"]["wasted_decode_steps"] == 0
+    assert sv["replica_lemma"]["predicted"]["replicas"] >= 1
+    assert sv["replica_lemma"]["measured"]["t_step_s"] > 0
+
+
+def test_golden_serve_rejects_serving_mutations():
+    """Single-field mutations of the serving/v1 section must each be
+    rejected; the deletion lists come from the validator's own tables."""
+    golden = _load("report_v1_serve.json")
+    for key in _SERVING_REQUIRED:
+        d = copy.deepcopy(golden)
+        d["measured"]["serving"].pop(key)
+        with pytest.raises(ValueError):
+            validate_report(d)
+    for sect, keys in _SERVING_SUBKEYS.items():
+        for key in keys:
+            d = copy.deepcopy(golden)
+            d["measured"]["serving"][sect].pop(key)
+            with pytest.raises(ValueError):
+                validate_report(d)
+    corruptions = [
+        lambda d: d["measured"]["serving"].update(
+            schema="repro.api/serving/v0"),
+        lambda d: d["measured"]["serving"].update(mode="adaptive"),
+        lambda d: d["measured"]["serving"]["kv_cache"].update(
+            peak_occupancy=1.5),
+        lambda d: d["measured"]["serving"]["latency_s"].update(
+            p50=d["measured"]["serving"]["latency_s"]["p99"] + 1.0),
+        lambda d: d["measured"].pop("serving"),
+    ]
+    for corrupt in corruptions:
+        d = copy.deepcopy(golden)
+        corrupt(d)
+        with pytest.raises(ValueError):
+            validate_report(d)
 
 
 def test_golden_metrics_validates():

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention import (decode_attention,
+                                            paged_decode_attention)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -63,6 +64,103 @@ def test_decode_attention_matches_oracle(B, S, H, KV, D, window, kb, dtype):
     want = ref.decode_attention_ref(q, k, v, pos, scale=scale, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(want, np.float32), **TOL[dtype])
+
+
+def _paged_from_linear(k, v, bs, *, key, extra=3):
+    """Scatter linear (B, KV, S, D) caches into shuffled block pools:
+    returns (k_pool, v_pool, block_table) with pools (N, KV, bs, D) and a
+    non-contiguous, non-monotonic table (B, S // bs)."""
+    B, KV, S, D = k.shape
+    nb = S // bs
+    n_pool = B * nb + extra
+    table = np.asarray(jax.random.permutation(key, n_pool)[:B * nb],
+                       np.int32).reshape(B, nb)
+    k_pool = np.asarray(
+        jax.random.normal(jax.random.fold_in(key, 1),
+                          (n_pool, KV, bs, D), jnp.float32), np.float32)
+    v_pool = k_pool[::-1].copy()  # poison unused blocks: gathers must skip
+    k_pool, v_pool = k_pool.astype(k.dtype), v_pool.astype(k.dtype)
+    kn, vn = np.asarray(k), np.asarray(v)
+    for b in range(B):
+        for i in range(nb):
+            k_pool[table[b, i]] = kn[b, :, i * bs:(i + 1) * bs]
+            v_pool[table[b, i]] = vn[b, :, i * bs:(i + 1) * bs]
+    return jnp.asarray(k_pool), jnp.asarray(v_pool), jnp.asarray(table)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,window,bs",
+    [
+        (2, 256, 4, 4, 64, 0, 64),
+        (3, 256, 8, 2, 64, 0, 32),    # GQA, non-contiguous table
+        (2, 256, 4, 2, 128, 96, 64),  # sliding window over block seams
+        (1, 128, 4, 4, 64, 0, 16),    # many small blocks
+    ],
+)
+def test_paged_decode_bitwise_matches_linear(B, S, H, KV, D, window, bs,
+                                             dtype):
+    """With matched blocking (linear kv_block == paged block size) the two
+    kernels share the accumulation order, so the paged gather must be
+    BIT-identical to the linear cache — the invariant that lets the paged
+    serving path claim the linear engine's numbers."""
+    key = jax.random.PRNGKey(3)
+    q, k, v = _mk_qkv(key, B, 1, S, H, KV, D, dtype)
+    q = q[:, :, 0]
+    pos = jax.random.randint(jax.random.fold_in(key, 11), (B,), 1, S)
+    k_pool, v_pool, table = _paged_from_linear(k, v, bs, key=key)
+    scale = 1.0 / np.sqrt(D)
+    lin = decode_attention(q, k, v, pos, scale=scale, window=window,
+                           kv_block=bs, interpret=True)
+    paged = paged_decode_attention(q, k_pool, v_pool, table, pos,
+                                   scale=scale, window=window,
+                                   interpret=True)
+    assert np.array_equal(np.asarray(lin), np.asarray(paged)), \
+        f"max diff {np.abs(np.asarray(lin, np.float32) - np.asarray(paged, np.float32)).max()}"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_matches_oracle_ragged(dtype):
+    """Paged kernel vs the pure-jnp oracle under ragged positions (every
+    row at a different fill level, including block-boundary edges)."""
+    B, S, H, KV, D, bs = 4, 128, 4, 2, 64, 32
+    key = jax.random.PRNGKey(5)
+    q, k, v = _mk_qkv(key, B, 1, S, H, KV, D, dtype)
+    q = q[:, :, 0]
+    pos = jnp.asarray([1, bs - 1, bs, S - 1], jnp.int32)  # edges + interior
+    k_pool, v_pool, table = _paged_from_linear(k, v, bs, key=key)
+    scale = 1.0 / np.sqrt(D)
+    out = paged_decode_attention(q, k_pool, v_pool, table, pos, scale=scale,
+                                 interpret=True)
+    want = ref.decode_attention_ref(q, k, v, pos, scale=scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_paged_ops_wrapper_matches_gathered_reference():
+    """The model-layout ops wrapper: paged attention over shuffled pools
+    equals the reference run on gather_kv_blocks'd linear caches."""
+    from repro.kernels import ops
+
+    B, S, H, KV, D, bs = 2, 64, 4, 2, 32, 16
+    key = jax.random.PRNGKey(9)
+    q, k, v = _mk_qkv(key, B, 1, S, H, KV, D, jnp.float32)
+    q = q[:, :, 0]
+    pos = jnp.asarray([S - 1, bs + 3], jnp.int32)
+    k_pool, v_pool, table = _paged_from_linear(k, v, bs, key=key)
+    scale = 1.0 / np.sqrt(D)
+    # model layout: q (B,1,H,D), pools (N, bs, KV, D)
+    out = ops.paged_decode_attention(
+        q[:, None], k_pool.transpose(0, 2, 1, 3),
+        v_pool.transpose(0, 2, 1, 3), table, pos, scale=scale)
+    k_lin = ops.gather_kv_blocks(k_pool.transpose(0, 2, 1, 3), table)
+    v_lin = ops.gather_kv_blocks(v_pool.transpose(0, 2, 1, 3), table)
+    want = ref.decode_attention_ref(q, k_lin.transpose(0, 2, 1, 3),
+                                    v_lin.transpose(0, 2, 1, 3), pos,
+                                    scale=scale)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(want, np.float32),
+                               **TOL[jnp.float32])
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

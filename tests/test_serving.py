@@ -1,0 +1,356 @@
+"""Continuous-batching serving runtime: allocator invariants, paged-KV
+round trips, scheduler accounting, arrival traces, and the inference
+replica lemma.
+
+The load-bearing claims, asserted here:
+
+- the continuous scheduler computes exactly ``sum(n_new)`` decode-token
+  steps (the static ``BatchScheduler`` computes ``len(batch) * max(n_new)``
+  per batch — the waste this PR removes),
+- decoding through the paged KV cache is bit-identical to the linear-cache
+  engine for the same token stream,
+- chunked prefill and whole-prompt prefill produce the same numbers,
+- arrival traces replay deterministically.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import memory_model as mm, ps as ps_lib
+from repro.models import model as M
+from repro.models.blocks import RunConfig
+from repro.models.common import materialize
+from repro.serve import arrivals
+from repro.serve.continuous import ContinuousEngine, ContinuousScheduler
+from repro.serve.engine import BatchScheduler, Engine
+from repro.serve.kvcache import BlockAllocator, PagedKVCache
+
+
+def tiny_cfg():
+    return get_config("granite-3-2b").reduced().replace(vocab_size=256)
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = tiny_cfg()
+    params = materialize(M.model_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+RUN = RunConfig(attn_impl="dense", remat="none")
+
+
+def _workload(cfg, seed=0, n=4, n_new=(1, 4, 2, 3)):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, cfg.vocab_size, (int(rng.integers(8, 24)),))
+             .astype(np.int32), n_new[i % len(n_new)]) for i in range(n)]
+
+
+def _run_static(cfg, params, reqs, *, s_max=64, max_batch=2):
+    eng = Engine(cfg, RUN, params, s_max=s_max)
+    sched = BatchScheduler(eng, max_batch=max_batch)
+    for prompt, n_new in reqs:
+        sched.submit(prompt, n_new)
+    return sched.run(), sched
+
+
+def _run_continuous(cfg, params, reqs, *, s_max=64, max_batch=2,
+                    n_blocks=16, block_size=16, prefill_chunk=0,
+                    steps=None):
+    eng = ContinuousEngine(cfg, RUN, params, s_max=s_max,
+                           max_batch=max_batch, prefill_chunk=prefill_chunk)
+    kv = PagedKVCache(cfg, block_size=block_size, n_blocks=n_blocks,
+                      s_max=s_max)
+    sched = ContinuousScheduler(eng, kv)
+    for i, (prompt, n_new) in enumerate(reqs):
+        sched.submit(prompt, n_new,
+                     arrival_step=steps[i] if steps else 0)
+    return sched.run(), sched, kv
+
+
+# ---------------------------------------------------------------------------
+# Arrival traces (pure python)
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_deterministic_and_monotone():
+    a = arrivals.poisson_trace(32, 0.5, seed=7)
+    b = arrivals.poisson_trace(32, 0.5, seed=7)
+    assert a == b
+    assert all(x <= y for x, y in zip(a, a[1:]))
+    assert a != arrivals.poisson_trace(32, 0.5, seed=8)
+    # higher rate arrives sooner on average
+    slow = arrivals.poisson_trace(64, 0.1, seed=1)
+    fast = arrivals.poisson_trace(64, 2.0, seed=1)
+    assert sum(fast) < sum(slow)
+
+
+def test_burst_trace_structure():
+    t = arrivals.burst_trace(7, 3, 10)
+    assert t == [0, 0, 0, 10, 10, 10, 20]
+
+
+def test_parse_trace():
+    assert arrivals.parse_trace("") == ("static", ())
+    assert arrivals.parse_trace("poisson:0.25") == ("poisson", (0.25,))
+    assert arrivals.parse_trace("burst:4x8") == ("burst", (4, 8))
+    for bad in ("poisson", "poisson:-1", "burst:4", "burst:0x8", "drizzle:1"):
+        with pytest.raises(ValueError):
+            arrivals.parse_trace(bad)
+    assert arrivals.make_trace("", 3) == [0, 0, 0]
+    assert len(arrivals.make_trace("poisson:0.5", 5, seed=2)) == 5
+
+
+# ---------------------------------------------------------------------------
+# Block allocator free-list invariants (pure python)
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_no_double_free_and_exhaustion():
+    a = BlockAllocator(4, 16)
+    bids = [a.alloc() for _ in range(4)]
+    assert len(set(bids)) == 4 and a.n_free == 0
+    with pytest.raises(RuntimeError):
+        a.alloc()
+    a.free(bids[0])
+    assert a.n_free == 1
+    with pytest.raises(RuntimeError):
+        a.free(bids[0])
+    assert a.peak_used == 4
+
+
+def test_allocator_prefix_share_refcounts():
+    a = BlockAllocator(4, 16)
+    bid = a.alloc()
+    key = ("tok", 1, 2, 3)
+    a.publish(bid, key)
+    assert a.lookup(key) == bid
+    assert a.share(key) == bid          # refcount 2
+    assert a.refcount(bid) == 2
+    a.free(bid)                         # refcount 1: still allocated
+    assert a.refcount(bid) == 1 and a.n_free == 3
+    a.free(bid)                         # refcount 0: returns to free list
+    assert a.n_free == 4 and a.lookup(key) is None
+    assert a.shared_hits == 1
+
+
+def test_allocator_randomized_invariants():
+    """Property check: under a random alloc/share/free walk, used + free
+    always partitions the pool and no live block is handed out twice."""
+    rng = np.random.default_rng(0)
+    a = BlockAllocator(8, 4)
+    live = {}  # bid -> refcount we believe it has
+    for step in range(400):
+        op = rng.integers(0, 3)
+        if op == 0 and a.can_alloc(1):
+            bid = a.alloc()
+            assert bid not in live, "allocator handed out a live block"
+            live[bid] = 1
+        elif op == 1 and live:
+            bid = int(rng.choice(list(live)))
+            key = ("k", bid)
+            if a.lookup(key) is None:
+                a.publish(bid, key)
+            a.share(key)
+            live[bid] += 1
+        elif op == 2 and live:
+            bid = int(rng.choice(list(live)))
+            a.free(bid)
+            live[bid] -= 1
+            if live[bid] == 0:
+                del live[bid]
+        assert a.n_used + a.n_free == 8
+        assert a.n_used == len(live)
+        for bid, refs in live.items():
+            assert a.refcount(bid) == refs
+
+
+# ---------------------------------------------------------------------------
+# Memory bound (Eq. 5 analogue) and the replica lemma (pure python)
+# ---------------------------------------------------------------------------
+
+
+def test_kv_memory_bound_per_arch():
+    attn = get_config("granite-3-2b").reduced()
+    ssm = get_config("mamba2-780m").reduced()
+    assert mm.kv_token_bytes(attn) > 0 and mm.request_state_bytes(attn) == 0
+    assert mm.kv_token_bytes(ssm) == 0 and mm.request_state_bytes(ssm) > 0
+    assert mm.max_kv_blocks(ssm, 2**34, block_size=16) == 0  # nothing paged
+
+
+def test_max_kv_blocks_monotone_in_hbm():
+    cfg = get_config("granite-3-2b").reduced()
+    sizes = [mm.max_kv_blocks(cfg, hbm, block_size=16)
+             for hbm in (2**28, 2**30, 2**34)]
+    assert sizes == sorted(sizes)
+    assert sizes[-1] > 0
+    # a budget below the resident weights leaves no room for blocks
+    assert mm.max_kv_blocks(cfg, 1024.0, block_size=16) == 0
+
+
+def test_replica_lemma_properties():
+    assert ps_lib.md1_wait(0.0, 1.0) == 0.0
+    assert ps_lib.md1_wait(0.9, 1.0) > ps_lib.md1_wait(0.5, 1.0)
+    rho = ps_lib.serve_utilization_bound(2.0, 1.0)
+    assert 0.0 < rho < 1.0
+    # at rho* the M/D/1 wait exactly meets the slack
+    assert ps_lib.md1_wait(rho, 1.0) == pytest.approx(2.0 - 1.0)
+    assert ps_lib.serve_utilization_bound(0.5, 1.0) == 0.0  # slack <= 0
+    # replicas scale with offered load
+    n = [ps_lib.n_replicas(lam, 0.5, 4, 0.8) for lam in (1.0, 10.0, 100.0)]
+    assert n == sorted(n) and n[-1] > n[0]
+
+
+def test_replica_plan_json_safe():
+    import json
+
+    ok = ps_lib.serve_replica_plan(arrival_rate=8.0, t_prefill_s=0.01,
+                                   t_step_s=0.002, n_new=16, batch=4,
+                                   slo_s=0.5)
+    assert ok["attainable"] and ok["replicas"] >= 1
+    bad = ps_lib.serve_replica_plan(arrival_rate=8.0, t_prefill_s=1.0,
+                                    t_step_s=0.1, n_new=16, batch=4,
+                                    slo_s=0.5)
+    assert not bad["attainable"] and bad["replicas"] == 0
+    for plan in (ok, bad):  # no inf/nan may reach a Report
+        json.dumps(plan)
+
+
+def test_spec_serving_validation():
+    from repro.api import JobSpec
+
+    JobSpec(arch="granite-3-2b", arrival="poisson:0.5")  # valid
+    with pytest.raises(ValueError):
+        JobSpec(arch="granite-3-2b", serve_mode="adaptive")
+    with pytest.raises(ValueError):
+        JobSpec(arch="granite-3-2b", kv_block=0)
+    with pytest.raises(ValueError):
+        JobSpec(arch="granite-3-2b", arrival="poisson:fast")
+    with pytest.raises(ValueError):
+        JobSpec(arch="granite-3-2b", max_kv_blocks=-1)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler accounting: the wasted-decode fix
+# ---------------------------------------------------------------------------
+
+
+def test_decode_steps_continuous_equals_sum_n_new(cfg_params):
+    """The regression this PR exists for: the static scheduler decodes
+    every request for the batch max and truncates; per-request retirement
+    computes exactly ``sum(n_new)`` token steps."""
+    cfg, params = cfg_params
+    reqs = _workload(cfg)
+    want = sum(n for _, n in reqs)
+
+    _, ssched = _run_static(cfg, params, reqs)
+    static_steps = ssched.stats["decode_token_steps"]
+    # len(batch) * max(n_new) per batch, by construction of the workload
+    assert static_steps == 2 * 4 + 2 * 3
+    assert static_steps > want
+    assert ssched.stats["wasted_decode_steps"] == static_steps - want
+
+    _, csched, _ = _run_continuous(cfg, params, reqs)
+    assert csched.stats["decode_token_steps"] == want
+    assert csched.stats["wasted_decode_steps"] == 0
+    assert csched.stats["delivered_tokens"] == want
+
+
+def test_continuous_stream_bit_identical_to_static(cfg_params):
+    """Same requests, same params: the paged-KV continuous runtime must
+    reproduce the linear-cache engine's token streams exactly."""
+    cfg, params = cfg_params
+    reqs = _workload(cfg, seed=3)
+    sres, _ = _run_static(cfg, params, reqs)
+    cres, _, kv = _run_continuous(cfg, params, reqs)
+    assert set(sres) == set(cres)
+    for rid in sres:
+        np.testing.assert_array_equal(sres[rid], cres[rid])
+    assert kv.stats()["peak_blocks"] > 0  # the pools were load-bearing
+
+
+def test_chunked_prefill_stream_identical(cfg_params):
+    cfg, params = cfg_params
+    reqs = _workload(cfg, seed=5)
+    whole, _, _ = _run_continuous(cfg, params, reqs)
+    chunked, sched, _ = _run_continuous(cfg, params, reqs, prefill_chunk=8)
+    assert sched.stats["prefill_chunks"] > 0
+    for rid in whole:
+        np.testing.assert_array_equal(whole[rid], chunked[rid])
+
+
+def test_extend_step_matches_whole_prefill(cfg_params):
+    """model.extend_step chunks == one whole-prompt forward.  Tight
+    allclose, not bitwise: under the suite's forced 8-device XLA config
+    the two attention lengths accumulate in different orders (~5e-7 on
+    f32 logits); the *token streams* are asserted bit-identical above."""
+    cfg, params = cfg_params
+    assert M.supports_extend(cfg)
+    assert not M.supports_extend(get_config("deepseek-v2-236b").reduced())
+    rng = np.random.default_rng(1)
+    L, C = 24, 8
+    toks = rng.integers(0, cfg.vocab_size, (1, L)).astype(np.int32)
+    want, _, _ = M.forward(params, {"tokens": jnp.asarray(toks)}, cfg, RUN,
+                           with_cache=True)
+    caches = jax.tree_util.tree_map(
+        lambda sp: jnp.zeros(sp.shape, jnp.bfloat16),
+        M.cache_specs(cfg, batch=1, s_max=32))
+    got = []
+    for lo in range(0, L, C):
+        pos0 = jnp.full((1,), lo, jnp.int32)
+        logits, caches = M.extend_step(params, jnp.asarray(toks[:, lo:lo + C]),
+                                       pos0, caches, cfg, RUN)
+        got.append(np.asarray(logits, np.float32))
+    np.testing.assert_allclose(np.concatenate(got, axis=1),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_arrival_replay_deterministic(cfg_params):
+    cfg, params = cfg_params
+    reqs = _workload(cfg, seed=2)
+    steps = arrivals.make_trace("poisson:0.3", len(reqs), seed=4)
+    r1, s1, _ = _run_continuous(cfg, params, reqs, steps=steps)
+    r2, s2, _ = _run_continuous(cfg, params, reqs, steps=steps)
+    for rid in r1:
+        np.testing.assert_array_equal(r1[rid], r2[rid])
+    assert s1.stats == s2.stats
+    assert s1.stats["virtual_steps"] >= max(steps)
+
+
+def test_prefix_sharing_and_admission_bound(cfg_params):
+    """Identical prompts share their full prompt blocks; a pool sized for
+    one request at a time forces serialized admission but still delivers,
+    and an impossible request raises instead of deadlocking."""
+    cfg, params = cfg_params
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, (32,)).astype(np.int32)
+    reqs = [(prompt, 3), (prompt, 3)]
+    cres, _, kv = _run_continuous(cfg, params, reqs, block_size=16,
+                                  n_blocks=8)
+    assert kv.stats()["shared_block_hits"] >= 2  # both full prompt blocks
+    sres, _ = _run_static(cfg, params, reqs)
+    for rid in sres:
+        np.testing.assert_array_equal(sres[rid], cres[rid])
+
+    # pool of 3 blocks: one 32+3-token request needs 3, so two requests
+    # must serialize through the pool
+    small = _workload(cfg, seed=7, n=3, n_new=(3,))
+    _, sched, kv2 = _run_continuous(cfg, params, small, block_size=16,
+                                    n_blocks=3)
+    assert sched.stats["requests"] == 3
+    assert kv2.stats()["peak_blocks"] <= 3
+
+    with pytest.raises(RuntimeError):  # 50+3 tokens = 4 blocks, pool has 3
+        _run_continuous(cfg, params,
+                        [(np.concatenate([prompt, prompt])[:50], 3)],
+                        block_size=16, n_blocks=3)
+
+
+def test_oversized_request_rejected(cfg_params):
+    cfg, params = cfg_params
+    prompt = np.zeros((60,), np.int32)
+    with pytest.raises(ValueError):  # 60 + 8 > s_max=64
+        _run_continuous(cfg, params, [(prompt, 8)])

@@ -103,13 +103,20 @@ def _serve_record(rep: Dict[str, Any]) -> Dict[str, float]:
     hists = (m.get("metrics") or {}).get("histograms", {})
     decode = hists.get("serve/decode_s", {})
     prefill = hists.get("serve/prefill_s", {})
-    return {
+    out = {
         "tokens_per_s": float(m["tokens_per_s"]),
         "wall_s": float(m.get("wall_s", 0.0)),
         "decode_p99_s": float(decode.get("p99", 0.0)),
         "prefill_p99_s": float(prefill.get("p99", 0.0)),
         "requests": float(m.get("requests", 0)),
     }
+    sv = m.get("serving") or {}
+    if sv:  # serving/v1 section: record the SLO-facing distribution too
+        out["latency_p99_s"] = float(sv["latency_s"]["p99"])
+        out["wasted_decode_steps"] = float(
+            sv["throughput"]["wasted_decode_steps"])
+        out["kv_peak_occupancy"] = float(sv["kv_cache"]["peak_occupancy"])
+    return out
 
 
 DISTILL = {"train": _train_record, "serve": _serve_record}
@@ -131,7 +138,7 @@ def append_record(area: str, report_path: str, *,
         "kind": kind,
         "spec": {k: rep["spec"].get(k) for k in
                  ("arch", "reduced", "steps", "batch", "seq", "dp",
-                  "sync_overlap", "requests", "n_new")},
+                  "sync_overlap", "requests", "n_new", "serve_mode")},
         "metrics": metrics,
     }
     if note:

@@ -28,7 +28,8 @@ REPO = Path(__file__).resolve().parent.parent
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
-SNIPPET_DOCS = ("docs/tuning_guide.md", "docs/observability.md")
+SNIPPET_DOCS = ("docs/tuning_guide.md", "docs/observability.md",
+                "docs/serving.md")
 
 
 def iter_doc_files():
