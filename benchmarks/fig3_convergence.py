@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.data.pipeline import PrefetchLoader
 from repro.models.blocks import RunConfig
 from repro.optim.adamw import OptConfig
 from repro.train.loop import train

@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.configs.base import get_config
 from repro.core import amdahl
 from repro.core.pipeline import StepTimes, multi_device_speedup
 from repro.models.blocks import RunConfig

@@ -18,7 +18,6 @@ for a laptop.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 from pathlib import Path
 

@@ -1,0 +1,54 @@
+"""repro.analysis — static analysis that proves the repo's invariants
+before runtime.
+
+Four domain analyzers, each emitting :class:`~repro.analysis.findings.Finding`
+rows with stable fingerprints (``code:path:context``) so justified
+suppressions in ``tools/lint_baseline.json`` survive line drift:
+
+- :mod:`~repro.analysis.kernel_contracts` (KC1xx) — symbolic
+  BlockSpec/grid/VMEM audit of every Pallas kernel against the config
+  registry's paper-scale shapes (the static form of
+  ``tests/test_kernel_vmem.py``, generalized to all archs x shapes x
+  dtypes).
+- :mod:`~repro.analysis.determinism` (DT1xx) — unseeded RNGs, wall-clock
+  reads outside ``repro.obs.trace``, host sync inside collective phases.
+- :mod:`~repro.analysis.mesh_axes` (MX1xx) — literal collective axis
+  names must be bound by a mesh declaration somewhere in the repo.
+- :mod:`~repro.analysis.schema_drift` (SD1xx) — schema-id literals vs
+  validators, ``HISTOGRAM_KEYS`` vs emitted metrics, goldens vs their
+  validators.
+
+``tools/repro_lint.py`` is the CLI/CI gate; ``docs/static_analysis.md``
+is the rule catalogue.
+"""
+from repro.analysis.findings import (BASELINE_SCHEMA_ID, FINDINGS_SCHEMA_ID,
+                                     Finding, apply_baseline, load_baseline,
+                                     make_baseline, make_findings_payload,
+                                     validate_baseline, validate_findings)
+
+from repro.analysis import determinism, kernel_contracts, mesh_axes, \
+    schema_drift  # noqa: E402  (analyzer modules re-exported as namespaces)
+
+ANALYZERS = {
+    "kernel": kernel_contracts.analyze,
+    "determinism": determinism.analyze,
+    "mesh": mesh_axes.analyze,
+    "schema": schema_drift.analyze,
+}
+
+
+def run_analyzers(root, names=None):
+    """Run the named analyzers (all by default) over the repo at ``root``;
+    returns the combined sorted finding list."""
+    out = []
+    for name in names or sorted(ANALYZERS):
+        out.extend(ANALYZERS[name](root))
+    return sorted(out)
+
+
+__all__ = [
+    "ANALYZERS", "BASELINE_SCHEMA_ID", "FINDINGS_SCHEMA_ID", "Finding",
+    "apply_baseline", "determinism", "kernel_contracts", "load_baseline",
+    "make_baseline", "make_findings_payload", "mesh_axes", "run_analyzers",
+    "schema_drift", "validate_baseline", "validate_findings",
+]

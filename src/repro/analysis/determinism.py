@@ -1,0 +1,233 @@
+"""Determinism & purity analyzer (DT1xx) — AST pass over ``src/repro``.
+
+The repo's bit-identity contracts (overlap sync, continuous-vs-static
+serving) only hold if nothing in a measured path consults an unseeded RNG
+or a second wall clock.  Three rules:
+
+- **DT101** — unseeded randomness: legacy ``np.random.*`` global-RNG
+  calls, zero-arg ``np.random.default_rng()``, zero-arg
+  ``random.Random()``, and module-level ``random.*`` draws.  Every RNG in
+  the repo must be an instance constructed from an explicit seed.
+- **DT102** — wall-clock reads outside the sanctioned clock: any
+  reference to ``time.time``/``perf_counter``/``monotonic``/
+  ``datetime.now`` (aliases included) anywhere except
+  ``repro.obs.trace`` — the one module allowed to own a clock.  Measured
+  paths read time via ``Tracer`` spans or ``repro.obs.trace.monotonic``.
+- **DT103** — host sync inside a collective phase: a function that issues
+  ``jax.lax`` collectives (psum, all_gather, ...) must not also call
+  ``float()``/``np.asarray()``/``.item()``/``jax.device_get()`` on its
+  values — each is a device->host sync that serializes the very overlap
+  the collective schedule exists to create.  (``int()`` is deliberately
+  not flagged: it is used on static shapes, not on device values.)
+
+The pass resolves import aliases per module (``import numpy as np``,
+``from time import perf_counter as pc``) so renamed imports cannot dodge
+the rules.  Fingerprint context is the dotted qualname of the enclosing
+def/class, keeping baseline entries stable across line drift.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.findings import Finding
+
+# files allowed to read the wall clock directly (repo-relative)
+DT102_EXEMPT = {"src/repro/obs/trace.py"}
+
+WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+# np.random.<fn> members that construct explicitly-seeded generators and
+# are therefore fine to reference
+NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                "Philox", "SFC64", "MT19937", "BitGenerator"}
+RANDOM_MODULE_FNS = {
+    "random", "randint", "randrange", "uniform", "choice", "choices",
+    "shuffle", "sample", "gauss", "normalvariate", "lognormvariate",
+    "expovariate", "betavariate", "gammavariate", "paretovariate",
+    "triangular", "vonmisesvariate", "weibullvariate", "getrandbits",
+    "randbytes", "seed",
+}
+COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "psum_scatter",
+               "all_gather", "ppermute", "all_to_all"}
+HOST_SYNC = {"numpy.asarray", "numpy.array", "jax.device_get"}
+
+
+class _Scope:
+    __slots__ = ("name", "has_collective", "sync_calls")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.has_collective = False
+        self.sync_calls: List[Tuple[int, str]] = []
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.aliases: Dict[str, str] = {}  # local name -> dotted origin
+        self.stack: List[str] = []
+        self.scopes: List[_Scope] = []
+        self.findings: List[Finding] = []
+        self._flagged: Set[Tuple[int, int]] = set()
+
+    # -- helpers --------------------------------------------------------
+    @property
+    def context(self) -> str:
+        return ".".join(self.stack) if self.stack else "<module>"
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Dotted origin of an expression, following import aliases:
+        ``np.random.rand`` -> ``numpy.random.rand``; None if the root
+        name is not an import."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        root = self.aliases.get(node.id)
+        if root is None:
+            return None
+        return ".".join([root] + list(reversed(parts)))
+
+    def _emit(self, node: ast.AST, code: str, msg: str) -> None:
+        key = (node.lineno, node.col_offset)
+        if key in self._flagged:
+            return
+        self._flagged.add(key)
+        self.findings.append(Finding(path=self.path, line=node.lineno,
+                                     code=code, message=msg,
+                                     context=self.context))
+
+    # -- imports --------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.aliases[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level or not node.module:
+            return  # relative imports never reach stdlib clocks
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    # -- scopes ---------------------------------------------------------
+    def _enter(self, node, is_func: bool) -> None:
+        self.stack.append(node.name)
+        if is_func:
+            self.scopes.append(_Scope(self.context))
+        self.generic_visit(node)
+        if is_func:
+            sc = self.scopes.pop()
+            if sc.has_collective:
+                for line, what in sc.sync_calls:
+                    self.findings.append(Finding(
+                        path=self.path, line=line, code="DT103",
+                        message=f"{what} inside a collective-issuing "
+                                "function forces a device->host sync that "
+                                "serializes comm/compute overlap",
+                        context=sc.name))
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node): self._enter(node, True)
+    def visit_AsyncFunctionDef(self, node): self._enter(node, True)
+    def visit_ClassDef(self, node): self._enter(node, False)
+
+    # -- rules ----------------------------------------------------------
+    def _check_wall_clock(self, node: ast.AST) -> None:
+        dotted = self.resolve(node)
+        if dotted in WALL_CLOCK and self.path not in DT102_EXEMPT:
+            self._emit(node, "DT102",
+                       f"wall-clock read {dotted}(); measured paths go "
+                       "through repro.obs.trace (Tracer span or "
+                       "monotonic())")
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self._check_wall_clock(node)
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load):
+            self._check_wall_clock(node)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        dotted = self.resolve(node.func)
+        if dotted:
+            self._check_dt101(node, dotted)
+            tail = dotted.rsplit(".", 1)
+            if (len(tail) == 2 and tail[1] in COLLECTIVES
+                    and tail[0] in ("jax.lax", "lax")):
+                if self.scopes:
+                    self.scopes[-1].has_collective = True
+            if dotted in HOST_SYNC and self.scopes:
+                self.scopes[-1].sync_calls.append(
+                    (node.lineno, f"{dotted}()"))
+        if (isinstance(node.func, ast.Name) and node.func.id == "float"
+                and node.args
+                and not isinstance(node.args[0], ast.Constant)
+                and self.scopes):
+            self.scopes[-1].sync_calls.append((node.lineno, "float()"))
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args
+                and self.scopes):
+            self.scopes[-1].sync_calls.append((node.lineno, ".item()"))
+        self.generic_visit(node)
+
+    def _check_dt101(self, node: ast.Call, dotted: str) -> None:
+        if dotted == "numpy.random.default_rng":
+            if not node.args and not node.keywords:
+                self._emit(node, "DT101",
+                           "np.random.default_rng() without a seed; pass "
+                           "an explicit seed")
+            return
+        if dotted.startswith("numpy.random."):
+            member = dotted.split(".", 2)[2].split(".")[0]
+            if member not in NP_RANDOM_OK:
+                self._emit(node, "DT101",
+                           f"legacy global-RNG call {dotted}(); use "
+                           "np.random.default_rng(seed)")
+            return
+        if dotted == "random.Random":
+            if not node.args and not node.keywords:
+                self._emit(node, "DT101",
+                           "random.Random() without a seed; pass an "
+                           "explicit seed")
+            return
+        if dotted.startswith("random."):
+            member = dotted.split(".", 1)[1]
+            if member in RANDOM_MODULE_FNS:
+                self._emit(node, "DT101",
+                           f"module-level {dotted}() draws from the "
+                           "process-global RNG; use a seeded "
+                           "random.Random(seed) instance")
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def analyze_source(src: str, path: str) -> List[Finding]:
+    """Run the determinism rules over one module's source text.  ``path``
+    is the repo-relative path the findings (and DT102 exemptions) use."""
+    v = _Visitor(path)
+    v.visit(ast.parse(src, filename=path))
+    return sorted(v.findings)
+
+
+def analyze(root) -> List[Finding]:
+    root = Path(root)
+    out: List[Finding] = []
+    for p in sorted((root / "src" / "repro").rglob("*.py")):
+        rel = p.relative_to(root).as_posix()
+        out.extend(analyze_source(p.read_text(), rel))
+    return out

@@ -25,7 +25,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, Union
 
-from repro.obs.metrics import METRICS_SCHEMA_ID, validate_metrics
+from repro.obs.metrics import validate_metrics
 
 SCHEMA_ID = "repro.api/report/v1"
 # the autotuner's section under measured["tuning"] (Session.tune emits it;

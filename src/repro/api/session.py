@@ -33,6 +33,7 @@ from repro.api.campaign import Campaign
 from repro.api.report import Report
 from repro.api.spec import JobSpec
 from repro.obs import MetricsRegistry, Tracer
+from repro.obs.trace import monotonic
 from repro.configs.base import ModelConfig, get_config, get_shape
 from repro.core import amdahl, memory_model as mm, ps as ps_lib
 from repro.core.hardware import (ClusterSpec, MeshSpec, MULTI_POD, SINGLE_POD,
@@ -442,9 +443,9 @@ class Session:
             sched.submit(prompt, n_new)
             lengths.append(n)
             n_news.append(n_new)
-        t0 = time.perf_counter()
+        t0 = monotonic()
         results = sched.run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         per_request = self._per_request(results, sched.latencies)
         n_tokens = sum(r["tokens"] for r in per_request)
         metrics.set_gauge("serve/wall_s", wall)
@@ -498,9 +499,9 @@ class Session:
             sched.submit(prompt, n_new, arrival_step=step)
             lengths.append(n)
             n_news.append(n_new)
-        t0 = time.perf_counter()
+        t0 = monotonic()
         results = sched.run()
-        wall = time.perf_counter() - t0
+        wall = monotonic() - t0
         per_request = self._per_request(results, sched.latencies)
         n_tokens = sum(r["tokens"] for r in per_request)
         metrics.set_gauge("serve/wall_s", wall)

@@ -7,12 +7,13 @@ from __future__ import annotations
 
 import json
 import threading
-import time
 from pathlib import Path
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
 import numpy as np
+
+from repro.obs.trace import monotonic
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -29,12 +30,12 @@ def save(tree, directory: str, step: int, *, blocking: bool = True):
     flat = _flatten(tree)
 
     def write():
-        t0 = time.perf_counter()
+        t0 = monotonic()
         np.savez(d / f"step_{step:08d}.npz", **flat)
         manifest = {
             "step": step,
             "keys": sorted(flat),
-            "written_s": round(time.perf_counter() - t0, 3),
+            "written_s": round(monotonic() - t0, 3),
         }
         (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
 

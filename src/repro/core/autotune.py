@@ -43,6 +43,7 @@ from repro.core.hardware import ClusterSpec, MeshSpec
 from repro.core.planner import (Plan, estimate_step_time, plan as plan_fn,
                                 train_flops_per_step)
 from repro.obs import MetricsRegistry, Tracer  # stdlib-only, import-light
+from repro.obs.trace import monotonic
 
 # Schema id of the tuning section a Session.tune() Report carries under
 # ``measured["tuning"]`` (validated by repro.api.report.validate_report).
@@ -66,9 +67,9 @@ def _timeit(fn, *args, repeats: int = 2) -> float:
     jax.block_until_ready(fn(*args))
     best = math.inf
     for _ in range(max(repeats, 1)):
-        t0 = time.perf_counter()
+        t0 = monotonic()
         jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, monotonic() - t0)
     return best
 
 

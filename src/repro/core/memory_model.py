@@ -12,8 +12,8 @@ All byte counts are *totals*; the planner divides by the sharding degrees.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M

@@ -13,7 +13,7 @@ feeding Lemma 3.1/3.2 in the planner.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict
 
 STEP_NAMES = (
     "param_refresh", "data_load", "data_prep", "h2d", "compute",

@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core import amdahl, ilp, memory_model as mm, ps
+from repro.core import amdahl, memory_model as mm, ps
 from repro.core.hardware import ClusterSpec, MeshSpec, SINGLE_POD, Tier
 from repro.models import model as M
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Dict, Iterator, Optional
@@ -21,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs.trace import monotonic
 
 
 @dataclass
@@ -89,13 +89,13 @@ class PrefetchLoader:
 
     def _producer(self):
         while not self._stop.is_set():
-            t0 = time.perf_counter()
+            t0 = monotonic()
             k = self.cfg.num_codebooks or 0
             need = self.batch * (self.seq + 1) * max(k, 1)
             raw = self._fill(need)
-            t_load = time.perf_counter() - t0
+            t_load = monotonic() - t0
 
-            t0 = time.perf_counter()
+            t0 = monotonic()
             if k:
                 arr = raw.reshape(self.batch, self.seq + 1, k)
                 tokens, labels = arr[:, :-1], arr[:, 1:]
@@ -111,7 +111,7 @@ class PrefetchLoader:
                 batch["image_embeds"] = rng.standard_normal(
                     (self.batch, self.cfg.num_image_tokens, self.cfg.d_model),
                     dtype=np.float32) * 0.02
-            t_prep = time.perf_counter() - t0
+            t_prep = monotonic() - t0
             # keep retrying the SAME batch: timing out used to silently drop
             # it, which made the token stream depend on step wall-clock and
             # broke same-seed run-to-run determinism
@@ -128,14 +128,14 @@ class PrefetchLoader:
 
     def __next__(self):
         batch, t_load, t_prep = self.q.get()
-        t0 = time.perf_counter()
+        t0 = monotonic()
         if self.sharding is not None:
             dev = {k: jax.device_put(v, self.sharding.get(k))
                    for k, v in batch.items()}
         else:
             dev = {k: jax.device_put(v) for k, v in batch.items()}
         jax.block_until_ready(jax.tree_util.tree_leaves(dev)[0])
-        t_h2d = time.perf_counter() - t0
+        t_h2d = monotonic() - t0
         return dev, BatchTimes(t_load, t_prep, t_h2d)
 
     def close(self):

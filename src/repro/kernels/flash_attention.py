@@ -13,7 +13,6 @@ Layout: q (B, H, Sq, D), k/v (B, KV, Sk, D) — transposed by ops.py.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

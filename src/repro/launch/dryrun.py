@@ -26,7 +26,6 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
 from pathlib import Path
 
@@ -34,6 +33,7 @@ import jax
 import numpy as np
 
 from repro.compat import set_mesh
+from repro.obs.trace import monotonic
 
 
 def _planner_defaults(cfg, shape):
@@ -125,13 +125,13 @@ def build_step_and_args(cfg, shape, mesh, run, *, counting=False,
 
 
 def lower_compile(fn, args, mesh, donate=()):
-    t0 = time.time()
+    t0 = monotonic()
     with set_mesh(mesh):
         lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = monotonic() - t0
+        t0 = monotonic()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = monotonic() - t0
     return lowered, compiled, t_lower, t_compile
 
 

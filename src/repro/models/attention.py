@@ -10,7 +10,7 @@ Shapes: x (B, S, D); caches are per-slot dicts of (B, S_max, ...) arrays.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -334,7 +334,6 @@ def _ring_positions(pos, s_cache: int, window: int, batch: int):
 def _cache_write_scatter(cache, new, pos):
     """In-place-friendly scatter write (§Perf): one row per example instead
     of the one-hot blend (which reads+writes the whole cache twice)."""
-    import jax
     b_idx = jnp.arange(cache.shape[0])
     return cache.at[b_idx, pos].set(new[:, 0].astype(cache.dtype))
 

@@ -2,11 +2,10 @@
 optional post-norms (gemma2). Dispatches on SlotSpec (mixer, mlp)."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional
+from dataclasses import dataclass
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SlotSpec
 from repro.models import attention as attn

@@ -11,7 +11,6 @@ A model's ``param_specs(config)`` returns a pytree whose leaves are
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 

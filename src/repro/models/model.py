@@ -11,7 +11,7 @@ slot ``i`` are stacked over ``num_cycles`` and the decoder is a
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import math
 import random
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 __all__ = ["METRICS_SCHEMA_ID", "Counter", "Gauge", "Histogram",
            "MetricsRegistry", "percentile", "validate_metrics"]

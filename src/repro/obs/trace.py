@@ -32,9 +32,18 @@ import threading
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Union
 
-__all__ = ["Span", "SpanEvent", "Tracer", "NULL_TRACER"]
+__all__ = ["Span", "SpanEvent", "Tracer", "NULL_TRACER", "monotonic"]
+
+
+def monotonic() -> float:
+    """The repo's sanctioned monotonic clock — the same clock ``Tracer``
+    spans run on.  Measured paths that need a raw timestamp (rather than
+    a span) read time through here, so this module stays the *only* place
+    in ``src/repro`` that touches ``time`` directly; the determinism
+    analyzer (DT102 in ``repro.analysis``) enforces exactly that."""
+    return time.perf_counter()
 
 
 @dataclass(frozen=True)

@@ -13,7 +13,7 @@ planner falls back to it when Adam state cannot fit M_bound).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ Design notes:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from time import perf_counter
+from repro.obs.trace import monotonic
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -203,7 +203,7 @@ class ContinuousScheduler:
         engine_steps = work_slots = prefill_chunks = 0
 
         def retire(req: ServeRequest, row: int) -> None:
-            req.t_finish = perf_counter()
+            req.t_finish = monotonic()
             self.latencies[req.rid] = req.t_finish - req.t_arrive
             results[req.rid] = np.stack(req.tokens)
             kv.release(req.rid)
@@ -219,7 +219,7 @@ class ContinuousScheduler:
             kv.write_prefill(req.rid, req.caches, req.length)
             req.caches = None  # working cache now comes from the pools
             req.tokens = [np.asarray(first_token, np.int32)]
-            req.t_first = perf_counter()
+            req.t_first = monotonic()
             self.first_token_s[req.rid] = req.t_first - req.t_arrive
             tokens[row] = first_token
             pos[row] = req.length
@@ -231,7 +231,7 @@ class ContinuousScheduler:
         while state["retired"] < total:
             while pending and pending[0].arrival_step <= clock:
                 req = pending.pop(0)
-                req.t_arrive = perf_counter()
+                req.t_arrive = monotonic()
                 ready.append(req)
             m.observe("serve/queue_depth", len(ready))
 

@@ -14,8 +14,7 @@ deprecation candidate for scripts — see README "One API".
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -27,7 +26,7 @@ from repro.data.pipeline import PrefetchLoader
 from repro.models import model as M
 from repro.models.blocks import RunConfig
 from repro.models.common import materialize
-from repro.obs.trace import Tracer
+from repro.obs.trace import Tracer, monotonic
 from repro.optim import adamw as opt_lib
 from repro.launch.steps import build_train_step
 from repro.checkpoint import io as ckpt_io
@@ -106,7 +105,7 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
 
     losses: List[float] = []
     times: List[StepTimes] = []
-    t_start = time.perf_counter()
+    t_start = monotonic()
     pending_ckpt = None
     try:
         for i in range(steps):
@@ -140,6 +139,6 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
             loader.close()
         if pending_ckpt is not None:
             pending_ckpt.join()
-    wall = time.perf_counter() - t_start
+    wall = monotonic() - t_start
     tokens = steps * batch * seq
     return TrainResult(losses, times, tokens / wall)

@@ -10,7 +10,7 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import amdahl, ilp, memory_model as mm, ps
-from repro.core.pipeline import StepTimes, multi_device_speedup, simulate_epoch
+from repro.core.pipeline import StepTimes, multi_device_speedup
 
 
 # ---------------------------------------------------------------------------

@@ -240,7 +240,7 @@ def _run_steps(trainer, steps, batch=16, seq=32):
     sequence (no loader): returns the final params pytree."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding
 
     cfg = trainer.cfg
     params, state = trainer.init(0)

@@ -1,11 +1,8 @@
 """Substrate tests: data pipeline, optimizer, checkpoint, train loop, serving."""
-import os
-import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import get_config
 from repro.data.pipeline import PrefetchLoader, SyntheticCorpus

@@ -12,9 +12,15 @@ runs inside tier-1 itself via ``tests/test_tier1_guard.py``):
 2. **Wall-clock budget**: given a ``--junit`` report from the tier-1 run
    (``pytest -q --junitxml=...``), the summed test time must stay under
    ``--budget-s``.
+3. **Lint budget** (CI's ``lint`` job): given ``--lint-json`` (the
+   ``repro.analysis/findings/v1`` artifact from ``tools/repro_lint.py
+   --json --out ...``), its recorded ``wall_s`` must stay under
+   ``--lint-budget-s`` — the static-analysis gate must stay cheap enough
+   to never be worth skipping.
 
     PYTHONPATH=src python tools/test_budget.py \
-        [--junit results/tier1.xml] [--budget-s 900]
+        [--junit results/tier1.xml] [--budget-s 900] \
+        [--lint-json results/lint_findings.json] [--lint-budget-s 120]
 
 Exit status 0 = within budget and no unmarked subprocess tests.
 """
@@ -34,6 +40,11 @@ TESTS_DIR = REPO / "tests"
 # the CI runner class; the budget leaves headroom without letting the fast
 # tier double silently.
 DEFAULT_BUDGET_S = 900.0
+
+# Static-analysis gate budget [s]: repro_lint runs in ~1-2s locally; 120s
+# leaves room for cold CI caches while still catching an analyzer that
+# grew a quadratic scan.
+DEFAULT_LINT_BUDGET_S = 120.0
 
 # Fast tests allowed to spawn subprocesses: (file, test-name) with
 # "*" = every test in the file.  Keep each entry justified.
@@ -147,17 +158,42 @@ def check_budget(junit: Path, budget_s: float) -> List[str]:
     return []
 
 
+def check_lint_budget(lint_json: Path, budget_s: float) -> List[str]:
+    """Validate the repro_lint findings artifact and price its wall clock."""
+    import json
+
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.analysis.findings import validate_findings
+
+    payload = validate_findings(json.loads(lint_json.read_text()))
+    wall = float(payload["wall_s"])
+    print(f"repro-lint wall clock: {wall:.1f}s "
+          f"(budget {budget_s:.0f}s, clean={payload['clean']})")
+    if wall > budget_s:
+        return [f"repro_lint took {wall:.1f}s > budget {budget_s:.0f}s — "
+                "the static-analysis gate must stay cheap"]
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--junit", default="",
                     help="junitxml report of the tier-1 run; omitting it "
                          "skips the wall-clock check (marker scan only)")
     ap.add_argument("--budget-s", type=float, default=DEFAULT_BUDGET_S)
+    ap.add_argument("--lint-json", default="",
+                    help="repro_lint --json artifact; omitting it skips "
+                         "the lint wall-clock check")
+    ap.add_argument("--lint-budget-s", type=float,
+                    default=DEFAULT_LINT_BUDGET_S)
     args = ap.parse_args(argv)
 
     problems = check_markers()
     if args.junit:
         problems += check_budget(Path(args.junit), args.budget_s)
+    if args.lint_json:
+        problems += check_lint_budget(Path(args.lint_json),
+                                      args.lint_budget_s)
     for p in problems:
         print(f"BUDGET GUARD: {p}", file=sys.stderr)
     if not problems:
