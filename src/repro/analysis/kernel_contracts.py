@@ -26,6 +26,14 @@ contract against the TPU tiling rules and the Eq.-5 memory budget:
   "does the working set fit the memory bound" feasibility check.
 - **KC106** — GQA head-mapping contract: ``H % KV != 0`` breaks the
   ``h // (H // KV)`` index map shared by the attention kernels.
+- **KC107** — 1F1B pipeline-stage contract: some stage's per-chip working
+  set (its balanced-cut share of params/grads/optimizer state plus
+  ``memory_model.stage_activation_bytes`` — saved activations times the
+  stage's in-flight microbatch count) exceeds the Eq.-5 HBM budget.  The
+  registry sweep prices each arch at the smallest feasible microbatch
+  count and *skips* cells where no count fits (the planner would never
+  pick them), so the repo self-run stays clean; the finding fires when a
+  pinned pipeline shape is checked directly (``pipeline_stage_findings``).
 
 The registry driver sweeps every arch in ``configs.ARCH_IDS`` against the
 paper-scale ``SHAPES`` in bf16 and f32, so a new architecture config that
@@ -51,6 +59,7 @@ KERNEL_FILES = {
     "decode_attention": "src/repro/kernels/decode_attention.py",
     "paged_decode_attention": "src/repro/kernels/decode_attention.py",
     "ssd_scan": "src/repro/kernels/ssd_scan.py",
+    "pipeline_stage": "src/repro/distributed/pipeline.py",
 }
 
 
@@ -358,8 +367,113 @@ def check_registry(chip: Chip = TPU_V5E, **kw
     return findings, audit
 
 
+# ---------------------------------------------------------------------------
+# KC107 — 1F1B pipeline-stage working set vs the Eq.-5 HBM budget
+# ---------------------------------------------------------------------------
+
+
+def pipeline_stage_findings(cfg, shape, *, pipe: int, n_microbatch: int,
+                            dp: int, tp: int = 1, attn_impl: str = "flash",
+                            remat: str = "block", chip: Chip = TPU_V5E,
+                            frac: float = 0.9,
+                            context: str = "pipeline_stage") -> List[Finding]:
+    """Check every 1F1B stage of a pinned pipeline shape: the stage's
+    balanced-cut share of params/grads/optimizer state plus its peak
+    activation working set (``stage_activation_bytes``: in-flight
+    microbatches scale with ``min(pipe - s, m)``) must fit
+    ``frac * hbm_bytes``.  Emits one KC107 per violating stage."""
+    # lazy: memory_model reaches repro.models (jax) — same rule as the
+    # TUNABLE_OPS drift guard, the pure checkers above stay import-light
+    from repro.core.memory_model import n_params, stage_activation_bytes
+    from repro.core.pipeline import balanced_stage_cut
+
+    op = "pipeline_stage"
+    cycles = ((cfg.num_layers - cfg.first_k_dense)
+              // max(len(cfg.pattern), 1))
+    if pipe < 1 or cycles < pipe:
+        return [_finding(op, "KC107",
+                         f"pipe={pipe} does not cut {cycles} layer cycles "
+                         "into non-empty stages", context)]
+    cut = balanced_stage_cut(cycles, pipe)
+    N = n_params(cfg)
+    chips = dp * tp
+    # per-stage static share (train_memory's conventions: bf16 + fp32
+    # master weights, fp32 grads, ZeRO-1 adamw state)
+    static = ((2 * N / tp + 4 * N / chips) + 4 * N / tp + 8 * N / chips) / pipe
+    budget = frac * chip.hbm_bytes
+    out: List[Finding] = []
+    for s in range(pipe):
+        act = stage_activation_bytes(
+            cfg, shape, dp=dp, tp=tp, pipe=pipe, n_microbatch=n_microbatch,
+            stage=s, stage_cycles=cut[s + 1] - cut[s], attn_impl=attn_impl,
+            remat=remat, seq_parallel=True)
+        ws = static + act
+        if ws > budget:
+            out.append(_finding(
+                op, "KC107",
+                f"stage {s}/{pipe} working set {ws:.3g} B (static "
+                f"{static:.3g} + activations {act:.3g}, "
+                f"{min(pipe - s, max(n_microbatch, pipe))} microbatches in "
+                f"flight) exceeds the Eq.-5 budget {budget:.3g} B "
+                f"(= {frac} * hbm)", context))
+    return out
+
+
+def check_pipeline_registry(chip: Chip = TPU_V5E, *, world: int = 8,
+                            shapes: Sequence[str] = ("train_4k",),
+                            ) -> Tuple[List[Finding], Dict[str, List[str]]]:
+    """Registry sweep for KC107: for every arch x pipe in {2, 4} x shape,
+    derive the smallest microbatch count in {p, 2p, 4p} the Eq.-5 gate
+    (``memory_model.train_memory``, the planner's own feasibility check)
+    accepts.  Cells the gate rejects at every count are *skipped* — the
+    planner would never pick them, so they are not lint findings.  A
+    gate-accepted cell whose per-stage audit still flags means this
+    mirror and ``memory_model`` drifted apart — that surfaces as KC107."""
+    from repro.core.memory_model import train_memory
+
+    findings: List[Finding] = []
+    audit: Dict[str, List[str]] = {"pipeline_stage": []}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        cycles = ((cfg.num_layers - cfg.first_k_dense)
+                  // max(len(cfg.pattern), 1))
+        for pipe in (2, 4):
+            if cycles < pipe or world % pipe:
+                continue
+            dp = world // pipe
+            for shape_name in shapes:
+                shape = SHAPES[shape_name]
+                ctx = f"pipeline_stage:{arch}:{shape_name}:p{pipe}"
+                # doubling microbatch counts up to one row per microbatch
+                # (more microbatches shrink the in-flight slice, so the
+                # smallest feasible m is the tightest cell worth auditing)
+                b_rep = max(shape.global_batch // (world // pipe), 1)
+                candidates = []
+                m = pipe
+                while m <= max(b_rep, pipe):
+                    candidates.append(m)
+                    m *= 2
+                for m in candidates:
+                    # microbatch=0: the 1F1B rows-per-microbatch derive
+                    # from m, the same convention stage_activation_bytes
+                    # prices — the gate and the audit see one schedule
+                    mem = train_memory(
+                        cfg, shape, dp=dp, tp=1, fsdp=False, microbatch=0,
+                        attn_impl="flash", remat="block", seq_parallel=True,
+                        pipe=pipe, n_microbatch=m)
+                    if mem.total > 0.9 * chip.hbm_bytes:
+                        continue  # Eq.-5 gate rejects: planner skips too
+                    audit["pipeline_stage"].append(f"{ctx}:m{m}")
+                    findings.extend(pipeline_stage_findings(
+                        cfg, shape, pipe=pipe, n_microbatch=m, dp=dp,
+                        chip=chip, context=f"{ctx}:m{m}"))
+                    break  # smallest feasible m prices the cell
+    return findings, audit
+
+
 def analyze(root=None) -> List[Finding]:
     """Uniform analyzer interface for the CLI (root unused: contracts come
     from the imported registry, not from file paths)."""
     findings, _ = check_registry()
-    return findings
+    pipe_findings, _ = check_pipeline_registry()
+    return findings + pipe_findings

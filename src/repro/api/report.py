@@ -126,6 +126,8 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
     for key in need:
         _require(key in d["measured"],
                  f"measured missing {key!r} for kind {d['kind']!r}")
+    if "pipe" in d["plan"]:
+        _validate_pipe(d["plan"])
     if "tuning" in d["measured"]:
         _validate_tuning(d["measured"]["tuning"])
     if "serving" in d["measured"]:
@@ -136,6 +138,35 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
         # any report may carry telemetry; delegate to repro.obs.metrics
         validate_metrics(d["measured"]["metrics"])
     return d
+
+
+def _validate_pipe(plan: Dict[str, Any]):
+    """Pipeline-shape invariants, checked whenever a plan declares a
+    ``pipe`` field (legacy plan dicts without one skip this — ``Plan``'s
+    from_dict migration fills the no-pipelining defaults): the stage count
+    must be a positive divisor of the world the topology names
+    (``pipe * dp * tp == world``), and 1F1B needs at least ``pipe``
+    microbatches to fill its warmup."""
+    pipe = plan["pipe"]
+    _require(isinstance(pipe, int) and pipe >= 1,
+             f"plan.pipe must be an int >= 1, got {pipe!r}")
+    if pipe <= 1:
+        return
+    _require("n_microbatch" in plan,
+             "pipelined plan (pipe > 1) missing 'n_microbatch'")
+    m = plan["n_microbatch"]
+    _require(isinstance(m, int) and m >= pipe,
+             f"plan.n_microbatch {m!r} must be an int >= pipe {pipe} "
+             "(1F1B needs a full warmup)")
+    topo = plan.get("topology")
+    if isinstance(topo, dict) and topo.get("tiers"):
+        world = 1
+        for t in topo["tiers"]:
+            world *= int(t["size"])
+        dp, tp = plan["mesh"]
+        _require(pipe * int(dp) * int(tp) == world,
+                 f"plan.pipe * dp * tp = {pipe}*{dp}*{tp} != world {world} "
+                 "(topology tier-size product)")
 
 
 # keys an overlapped SyncReport must carry in measured["sync"] (see

@@ -55,6 +55,19 @@ class Session:
         self.cfg_full = get_config(spec.arch)
         self.cfg = config if config is not None else (
             self.cfg_full.reduced() if spec.reduced else self.cfg_full)
+        if (spec.pipe > 1 and config is None and spec.reduced):
+            # reduced() keeps one layer cycle — nothing to cut into stages.
+            # Deepen to two cycles per stage: the minimum that both cuts
+            # and keeps every stage's scan a real loop (trip-count-1 scans
+            # get inlined/re-fused by XLA, breaking bit-identity with the
+            # single-stage trainer — see repro.distributed.pipeline).
+            from repro.models.model import main_cycles
+
+            need = 2 * spec.pipe
+            if main_cycles(self.cfg) < need:
+                self.cfg = self.cfg.replace(
+                    num_layers=self.cfg.first_k_dense
+                    + need * len(self.cfg.pattern))
         self.shape = get_shape(spec.shape)
         if spec.topology:
             # a named cluster pins the mesh geometry to its chip count
@@ -117,6 +130,8 @@ class Session:
     def resolved_plan(self) -> Plan:
         if self._plan is None:
             self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec,
+                                 pipe=self.spec.pipe or None,
+                                 n_microbatch=self.spec.n_microbatch,
                                  **self._overlap_kwargs())
         return self._plan
 
@@ -238,8 +253,35 @@ class Session:
                        seed=spec.seed, log_every=spec.log_every,
                        ckpt_dir=spec.ckpt_dir or None,
                        ckpt_every=spec.ckpt_every)
-        sync_rep = None
-        if spec.dp:
+        sync_rep = pipe_rep = None
+        if spec.pipe > 1:
+            import dataclasses as _dc
+
+            import jax
+
+            from repro.distributed import PipelineTrainer
+
+            devs = jax.devices()
+            world = spec.dp or len(devs)
+            if len(devs) < world:
+                raise RuntimeError(
+                    f"pipe={spec.pipe} on {world} devices but only "
+                    f"{len(devs)} visible; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={world}")
+            # the 1F1B schedule owns microbatching — the planner's
+            # accumulation knob must not nest another scan inside a stage
+            run = _dc.replace(run, microbatch=0)
+            strategy = (self.resolved_plan.resolve_sync()
+                        if spec.sync == "auto" else spec.sync)
+            trainer = PipelineTrainer(
+                self.cfg, run, opt, pipe=spec.pipe,
+                n_microbatch=spec.n_microbatch, strategy=strategy,
+                compression=spec.compress, devices=devs[:world],
+                tracer=tracer, metrics=metrics)
+            res = trainer.train(**loop_kw)
+            sync_rep = trainer.report()
+            pipe_rep = trainer.pipeline_report()
+        elif spec.dp:
             import jax
 
             from repro.distributed import DataParallelTrainer
@@ -283,6 +325,8 @@ class Session:
         metrics.set_gauge("train/r_o", measured["r_o"])
         if sync_rep is not None:
             measured["sync"] = sync_rep.as_dict()
+        if pipe_rep is not None:
+            measured["pipeline"] = pipe_rep.as_dict()
         if spec.tune:  # the run adopted tuned knobs: record what they were
             measured["tuning"] = self.tuned.section()
         measured["metrics"] = metrics.section()
@@ -601,10 +645,22 @@ class Session:
             terms = estimate_step_time(self.cfg_full, self.shape,
                                        self.mesh_spec, p.remat,
                                        max(p.microbatch, 1),
+                                       pipe=getattr(p, "pipe", 1),
+                                       n_microbatch=getattr(
+                                           p, "n_microbatch", 0),
                                        **self._overlap_kwargs())
             out["step_time_terms"] = terms
             # with overlap on, only the exposed collective share is overhead
             r_o_model = r_o_from_terms(terms)
+        if getattr(p, "pipe", 1) > 1:
+            from repro.core.pipeline import pipeline_bubble
+
+            out["pipeline"] = {
+                "pipe": p.pipe,
+                "n_microbatch": p.n_microbatch,
+                "stage_cut": list(p.stage_cut or ()),
+                "bubble_model": pipeline_bubble(p.pipe, p.n_microbatch),
+            }
         # Lemma 3.1: efficiency/speedup curve from the best available R_O
         r_o = measured_r_o if measured_r_o is not None else r_o_model
         out["lemma31"] = {

@@ -46,6 +46,10 @@ class JobSpec:
     seed: int = 0
     use_planner: bool = False     # adopt planner knobs (microbatch/attn/remat/opt)
     dp: int = 0                   # >0: explicit data-parallel trainer on dp devices
+    pipe: int = 0                 # >0: 1F1B pipeline trainer with this many
+                                  # stages (devices split pipe x data);
+                                  # 0 = planner-resolved / no pipelining
+    n_microbatch: int = 0         # 1F1B microbatches per step; 0 = pipe
     sync: str = "auto"            # gradient-sync schedule, or planner-resolved
     compress: str = "none"        # gradient compression
     sync_overlap: bool = False    # bucketed comm/compute overlap (trainer +
@@ -115,6 +119,11 @@ class JobSpec:
             parse_trace(self.arrival)  # raises ValueError on a bad spec
         if self.dp < 0:
             raise ValueError("dp must be >= 0 (0 = single-process loop)")
+        if self.pipe < 0 or self.n_microbatch < 0:
+            raise ValueError("pipe and n_microbatch must be >= 0")
+        if self.pipe > 1 and self.n_microbatch and self.n_microbatch < self.pipe:
+            raise ValueError(f"n_microbatch {self.n_microbatch} must be >= "
+                             f"pipe {self.pipe} (1F1B needs a full warmup)")
         if self.bucket_mb < 0:
             raise ValueError("bucket_mb must be >= 0 (0 = default bucket size)")
         if self.dp and self.batch % self.dp:

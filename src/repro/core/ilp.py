@@ -10,8 +10,8 @@ a greedy lower bound, exact for the layer counts here (<= 128 groups), and
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple)
 
 
 @dataclass(frozen=True)
@@ -129,3 +129,107 @@ def solve_ilp_dp(layers: Sequence[Sequence[Choice]], m_bound: float,
     t = sum(layers[k][picks[k]].time for k in range(n))
     m = sum(layers[k][picks[k]].memory for k in range(n))
     return ILPSolution(picks, t, m, feasible=True)
+
+
+# ---------------------------------------------------------------------------
+# Generic branch-and-bound over configuration dimensions (the unified
+# auto-parallel search: Eq. 6 generalized from per-layer algorithms to the
+# planner's whole (pipe, microbatch, attention, remat, ...) grid)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Dim:
+    """One search dimension: a name and its candidate values, in the order
+    they should be tried (ties in predicted time resolve to the earliest
+    enumerated config, exactly like exhaustive enumeration with strict <)."""
+
+    name: str
+    values: Tuple[Any, ...]
+
+    def __post_init__(self):
+        if not self.values:
+            raise ValueError(f"dim {self.name!r} has no candidate values")
+
+
+@dataclass
+class SearchResult:
+    """Outcome of :func:`search_bnb`.  When no config is feasible,
+    ``feasible`` is False and ``config`` is the memory-frugal pick (the
+    same contract as :func:`solve_ilp`'s infeasible path)."""
+
+    config: Dict[str, Any]
+    time: float
+    memory: float
+    feasible: bool
+    n_evaluated: int = 0
+    n_pruned: int = 0
+    notes: List[str] = field(default_factory=list)
+
+
+def search_bnb(dims: Sequence[Dim],
+               evaluate: Callable[[Dict[str, Any]], Tuple[float, float, bool]],
+               *,
+               lower_bound: Optional[Callable[[Dict[str, Any]], float]] = None
+               ) -> SearchResult:
+    """Branch-and-bound over the cross product of ``dims``.
+
+    ``evaluate(config)`` prices a complete assignment and returns
+    ``(time, memory, feasible)``.  ``lower_bound(partial)``, if given, must
+    be *admissible*: a value <= the time of every completion of the partial
+    assignment — only then is the search exact (equal to exhaustive
+    enumeration, which the property tests assert).  Subtrees are pruned
+    when the bound cannot beat the incumbent.
+
+    If nothing is feasible, no incumbent ever forms, so no subtree is
+    pruned — the full grid is priced and the minimum-memory config is
+    returned with ``feasible=False`` (memory-frugal, like
+    :func:`solve_ilp`)."""
+    n = len(dims)
+    best_time = float("inf")
+    best_cfg: Optional[Dict[str, Any]] = None
+    best_mem = 0.0
+    frugal_mem = float("inf")
+    frugal_cfg: Optional[Dict[str, Any]] = None
+    frugal_time = 0.0
+    stats = {"evaluated": 0, "pruned": 0}
+
+    def dfs(idx: int, partial: Dict[str, Any]):
+        nonlocal best_time, best_cfg, best_mem
+        nonlocal frugal_mem, frugal_cfg, frugal_time
+        if idx == n:
+            stats["evaluated"] += 1
+            t, mem, ok = evaluate(dict(partial))
+            if ok and t < best_time:
+                best_time, best_cfg, best_mem = t, dict(partial), mem
+            if mem < frugal_mem:
+                frugal_mem, frugal_cfg, frugal_time = mem, dict(partial), t
+            return
+        if lower_bound is not None and best_time < float("inf"):
+            if lower_bound(dict(partial)) >= best_time:
+                stats["pruned"] += 1
+                return
+        for v in dims[idx].values:
+            partial[dims[idx].name] = v
+            dfs(idx + 1, partial)
+            del partial[dims[idx].name]
+
+    dfs(0, {})
+    if best_cfg is not None:
+        return SearchResult(best_cfg, best_time, best_mem, feasible=True,
+                            n_evaluated=stats["evaluated"],
+                            n_pruned=stats["pruned"])
+    assert frugal_cfg is not None
+    return SearchResult(frugal_cfg, frugal_time, frugal_mem, feasible=False,
+                        n_evaluated=stats["evaluated"],
+                        n_pruned=stats["pruned"])
+
+
+def search_exhaustive(dims: Sequence[Dim],
+                      evaluate: Callable[[Dict[str, Any]],
+                                         Tuple[float, float, bool]]
+                      ) -> SearchResult:
+    """Reference enumeration with the same tie-break (strict <, dim-order
+    traversal) — the oracle the optimality property tests compare
+    :func:`search_bnb` against."""
+    return search_bnb(dims, evaluate, lower_bound=None)

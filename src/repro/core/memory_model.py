@@ -198,24 +198,42 @@ def n_active_params(cfg: ModelConfig) -> int:
 def train_memory(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
                  fsdp: bool, microbatch: int, attn_impl: str,
                  remat: str, seq_parallel: bool,
-                 opt_kind: str = "adamw") -> TransformerMemory:
-    """Per-chip bytes for one training step."""
+                 opt_kind: str = "adamw", pipe: int = 1,
+                 n_microbatch: int = 0) -> TransformerMemory:
+    """Per-chip bytes for one training step.
+
+    With ``pipe > 1`` the stack is cut into ``pipe`` contiguous stage
+    groups: params/grads/opt shrink by ``pipe`` (each chip holds one
+    stage), the per-microbatch activation slice is ``B_rep / m`` rows, and
+    the 1F1B schedule keeps ``min(pipe - s, m)`` microbatches in flight on
+    stage ``s`` — this returns the stage-0 worst case (the KC107 contract
+    checks every stage via :func:`stage_activation_bytes`).  ``dp`` is the
+    data-parallel degree only; pass ``world // (tp * pipe)`` for a fixed
+    chip budget."""
     N = n_params(cfg)
     chips = dp * tp
     p_shard = chips if fsdp else tp
-    params = 2 * N / p_shard + 4 * N / chips  # bf16 compute + fp32 master(ZeRO)
-    grads = 4 * N / p_shard
+    pipe = max(int(pipe), 1)
+    params = (2 * N / p_shard + 4 * N / chips) / pipe  # bf16 + fp32 master
+    grads = 4 * N / p_shard / pipe
     opt_per = {"adamw": 8, "momentum": 4}[opt_kind]
-    opt_state = opt_per * N / chips  # ZeRO-1: always fully sharded
+    opt_state = opt_per * N / chips / pipe  # ZeRO-1: always fully sharded
 
     B_rep = max(shape.global_batch // dp, 1)
-    mb = microbatch or B_rep
+    if pipe > 1:
+        m = max(int(n_microbatch) or pipe, pipe)
+        mb = max((microbatch or B_rep) // m, 1)
+        in_flight = min(pipe, m)  # stage 0 holds the most under 1F1B
+    else:
+        mb = microbatch or B_rep
+        in_flight = 1
     S = shape.seq_len
     D = cfg.d_model
     seq_shard = tp if seq_parallel else 1
 
     n_saved = cfg.num_layers if remat == "block" else 4 * cfg.num_layers
-    activations = n_saved * mb * S * D * 2 / seq_shard
+    n_saved /= pipe  # each stage saves only its own layers' activations
+    activations = n_saved * mb * S * D * 2 / seq_shard * in_flight
     # live working set inside one block (attention blocks, mlp ff transient)
     ff = max(cfg.d_ff, cfg.moe_d_ff)
     work = mb * S * max(ff // tp, D) * 2 * 4 / seq_shard
@@ -226,6 +244,38 @@ def train_memory(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,
 
     logits = mb * S * cfg.padded_vocab * 4 * 2 / tp / seq_shard  # f32 + grad
     return TransformerMemory(params, grads, opt_state, activations, logits, 0.0)
+
+
+def stage_activation_bytes(cfg: ModelConfig, shape: ShapeConfig, *, dp: int,
+                           tp: int, pipe: int, n_microbatch: int, stage: int,
+                           stage_cycles: int, attn_impl: str, remat: str,
+                           seq_parallel: bool) -> float:
+    """Per-chip activation working set of pipeline stage ``stage`` under
+    1F1B — the Eq.-5 feasibility term the KC107 contract prices: saved
+    activations for the stage's ``stage_cycles`` layer cycles times its
+    in-flight microbatch count ``min(pipe - stage, m)``, plus one live
+    block working set, plus the logits buffer on the last stage."""
+    pipe = max(int(pipe), 1)
+    m = max(int(n_microbatch) or pipe, pipe)
+    if not 0 <= stage < pipe:
+        raise ValueError(f"stage {stage} outside [0, {pipe})")
+    B_rep = max(shape.global_batch // dp, 1)
+    mb = max(B_rep // m, 1)
+    S, D = shape.seq_len, cfg.d_model
+    seq_shard = tp if seq_parallel else 1
+    in_flight = min(pipe - stage, m)
+
+    layers = stage_cycles * max(len(cfg.pattern), 1)
+    n_saved = layers if remat == "block" else 4 * layers
+    act = n_saved * mb * S * D * 2 / seq_shard * in_flight
+    ff = max(cfg.d_ff, cfg.moe_d_ff)
+    act += mb * S * max(ff // tp, D) * 2 * 4 / seq_shard
+    if attn_impl == "dense":
+        heads_shard = tp if (cfg.num_heads % tp == 0) else 1
+        act += 4 * mb * (cfg.num_heads / heads_shard) * S * S / seq_shard
+    if stage == pipe - 1:
+        act += mb * S * cfg.padded_vocab * 4 * 2 / tp / seq_shard
+    return act
 
 
 def max_microbatch(cfg: ModelConfig, shape: ShapeConfig, *, dp: int, tp: int,

@@ -3,10 +3,13 @@ assigned architectures on the TPU mesh.
 
 Given (arch config, input shape, mesh spec) it:
   1. builds the memory model (M_bound analogue, §3.1.3),
-  2. sweeps candidate microbatch sizes (the X_mini knob) and solves the
-     Eq.-6 ILP over per-layer algorithm choices — attention impl
-     {dense, flash/chunked} × remat {save, recompute} — under the HBM bound,
-  3. estimates step time from a napkin roofline (compute/memory/collective),
+  2. runs a branch-and-bound search (``repro.core.ilp.search_bnb``, the
+     Eq.-6 machinery generalized) over the unified candidate grid —
+     pipeline stages × microbatch count (the X_mini knob) × attention impl
+     {dense, flash/chunked} × remat {save, recompute} — priced by the
+     roofline under the HBM bound,
+  3. estimates step time from a napkin roofline (compute/memory/collective,
+     plus the 1F1B bubble and p2p terms when a pipeline cut is searched),
   4. applies Lemma 3.1 to report efficiency/speedup for the mesh size and
      Lemma 3.2 (TPU mapping) to pick the gradient-sync schedule,
   5. emits a Plan with every runtime knob the launcher needs.
@@ -17,11 +20,13 @@ import dataclasses
 import json
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import amdahl, memory_model as mm, ps
 from repro.core.hardware import ClusterSpec, MeshSpec, SINGLE_POD, Tier
+from repro.core.ilp import Dim, search_bnb
+from repro.core.pipeline import balanced_stage_cut, pipeline_bubble
 from repro.models import model as M
 
 
@@ -56,6 +61,13 @@ class Plan:
     sync_overlap: bool = False
     bucket_mb: float = 0.0
     bucket_plan: Optional[Dict] = None
+    # pipeline parallelism (1F1B): stage count, microbatch count per step,
+    # and the contiguous layer-cycle cut boundaries (len pipe + 1).  Legacy
+    # plan dicts predate these fields and migrate to the defaults (no
+    # pipelining) through from_dict's known-field filter.
+    pipe: int = 1
+    n_microbatch: int = 1
+    stage_cut: Optional[List[int]] = None
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
@@ -64,11 +76,12 @@ class Plan:
 
     def to_job_kwargs(self) -> Dict:
         """Every runtime knob a Session/launcher adopts from this plan:
-        the RunConfig knobs plus optimizer kind, the sync schedule, and the
-        overlap knobs."""
+        the RunConfig knobs plus optimizer kind, the sync schedule, the
+        overlap knobs, and the pipeline shape."""
         return dict(self.run_config_kwargs(), opt_kind=self.opt_kind,
                     sync=self.sync_schedule, sync_overlap=self.sync_overlap,
-                    bucket_mb=self.bucket_mb)
+                    bucket_mb=self.bucket_mb, pipe=self.pipe,
+                    n_microbatch=self.n_microbatch)
 
     # -- topology view -----------------------------------------------------
     @property
@@ -211,7 +224,9 @@ def grad_sync_time(s_p: float, dp_tiers: Tuple[Tier, ...]) -> Tuple[float, str]:
 def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                        remat: str, microbatch: int, *,
                        sync_overlap: bool = False, bucket_mb: float = 0.0,
-                       overlap_efficiency: float = 1.0) -> Dict[str, float]:
+                       overlap_efficiency: float = 1.0,
+                       pipe: int = 1,
+                       n_microbatch: int = 0) -> Dict[str, float]:
     """Napkin roofline terms [s].  With ``sync_overlap`` the gradient-sync
     collective is priced through the bucketed-overlap model
     (:func:`repro.core.ps.overlap_exposed_comm`): only the comm that sticks
@@ -220,13 +235,30 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     ``total`` uses and degrades to ``collective`` exactly when
     ``sync_overlap`` is off (or the payload yields a single bucket).
     ``overlap_efficiency`` derates the hideable window to a *measured*
-    overlap fraction (autotune calibration)."""
+    overlap fraction (autotune calibration).
+
+    With ``pipe > 1`` the mesh's data axis is split ``pipe x (dp/pipe)``:
+    compute stretches by the 1F1B fill/drain factor ``(m+p-1)/m``
+    (``pipeline_bubble``), each stage holds and syncs ``1/pipe`` of the
+    params, per-stage param re-reads scale with the microbatch count, and
+    a ``collective_p2p`` term prices the boundary activation transfers on
+    the innermost tier."""
+    pipe = max(int(pipe), 1)
+    m = max(int(n_microbatch) or pipe, pipe)
+    dp_data = max(mesh.dp // pipe, 1)
     flops = train_flops_per_step(cfg, shape, remat) / mesh.chips
     t_compute = flops / mesh.chip.peak_flops
+    bubble = pipeline_bubble(pipe, m)
+    if pipe > 1:
+        t_compute *= (m + pipe - 1) / m  # == 1 / (1 - bubble)
     # memory term: params read per microbatch pass + activations traffic
     n = mm.n_params(cfg)
-    n_micro = max(shape.global_batch // mesh.dp, 1) // max(microbatch, 1)
-    param_traffic = 2 * n / mesh.tp * 3 * max(n_micro, 1)
+    if pipe > 1:
+        # each stage re-reads its 1/pipe param slice once per microbatch
+        param_traffic = 2 * n / pipe / mesh.tp * 3 * m
+    else:
+        n_micro = max(shape.global_batch // mesh.dp, 1) // max(microbatch, 1)
+        param_traffic = 2 * n / mesh.tp * 3 * max(n_micro, 1)
     act_traffic = 12 * shape.global_batch * shape.seq_len * cfg.d_model * 2 / mesh.chips
     t_mem = (param_traffic + act_traffic) / mesh.chip.hbm_bw
     # collectives, priced per topology tier: the fp32 grad sync rides the
@@ -235,12 +267,19 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     # the innermost (fastest) tier, where TP ranks are packed
     cluster = mesh.cluster
     tiers = _dp_tiers(mesh)
-    grad_bytes = 4 * n / mesh.tp
+    grad_bytes = 4 * n / mesh.tp / pipe
     t_grad, _ = grad_sync_time(grad_bytes, tiers)
     tp_wire = (4 * cfg.num_layers * shape.global_batch * shape.seq_len
                * cfg.d_model * 2 / mesh.chips)
     t_tp = tp_wire / cluster.tiers[0].bw
-    t_coll = t_grad + t_tp
+    # stage-boundary activation p2p: every microbatch ships its (rows x S
+    # x D) bf16 slab forward and its cotangent back across each boundary
+    t_p2p = 0.0
+    if pipe > 1:
+        rows = max(shape.global_batch // dp_data // m, 1)
+        t_p2p = (2 * (pipe - 1) / pipe * m * rows * shape.seq_len
+                 * cfg.d_model * 2 / cluster.tiers[0].bw)
+    t_coll = t_grad + t_tp + t_p2p
     # overlap: the exposed share of the grad sync under the bucketed model
     t_grad_exposed, overlap_frac, n_buckets = t_grad, 0.0, 1
     if sync_overlap and t_grad > 0:
@@ -249,13 +288,15 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
         t_grad_exposed = ps.overlap_exposed_comm(
             t_grad, t_bwd, n_buckets, overlap_efficiency=overlap_efficiency)
         overlap_frac = (t_grad - t_grad_exposed) / t_grad
-    t_coll_eff = t_grad_exposed + t_tp
+    t_coll_eff = t_grad_exposed + t_tp + t_p2p
     return {"compute": t_compute, "memory": t_mem, "collective": t_coll,
             "collective_grad": t_grad, "collective_tp": t_tp,
+            "collective_p2p": t_p2p,
             "collective_grad_exposed": t_grad_exposed,
             "collective_effective": t_coll_eff,
             "overlap_fraction": overlap_frac,
             "overlap_n_buckets": float(n_buckets),
+            "pipeline_bubble": bubble,
             "total": max(t_compute, t_mem, t_coll_eff)}
 
 
@@ -264,10 +305,113 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
 # ---------------------------------------------------------------------------
 
 
+def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
+                       fsdp: bool, opt_kind: str,
+                       sync_overlap: bool = False, bucket_mb: float = 0.0,
+                       overlap_efficiency: float = 1.0,
+                       pipe: Optional[int] = None, n_microbatch: int = 0
+                       ) -> Tuple[List[Dim],
+                                  Callable[[Dict], Tuple[float, float, bool]],
+                                  Callable[[Dict], float]]:
+    """The unified auto-parallel grid for one (arch, shape, mesh):
+    ``(dims, evaluate, lower_bound)`` ready for
+    :func:`repro.core.ilp.search_bnb` — and for
+    :func:`repro.core.ilp.search_exhaustive`, the oracle the optimality
+    tests compare against.
+
+    Dimensions, in tie-break order: the joint ``pipe_m = (pipe,
+    n_microbatch)`` candidates with the no-pipeline cell ``(1, 1)`` first,
+    then the per-device microbatch rows, attention impl, and remat — the
+    historical enumeration order, so strict-< keeps legacy picks stable.
+    ``evaluate`` prices a cell with :func:`estimate_step_time` under the
+    Eq.-5 memory bound (0.9 x HBM, via ``mm.train_memory``); non-canonical
+    cells (microbatch not dividing the replica batch; an explicit row count
+    alongside a pipeline cut, where ``m`` already fixes the rows) price as
+    infeasible with infinite memory so they can never win the frugal pick.
+    ``lower_bound`` is admissible: 0.98 x the compute-only roofline under
+    the best unassigned remat, times the 1F1B stretch once a cut is fixed.
+
+    Pass ``pipe``/``n_microbatch`` to clamp the grid to a user-forced
+    pipeline shape (``launch/train.py --pipe/--microbatch``)."""
+    overlap_kw = dict(sync_overlap=sync_overlap, bucket_mb=bucket_mb,
+                      overlap_efficiency=overlap_efficiency)
+    hbm = mesh.chip.hbm_bytes
+    b_rep = max(shape.global_batch // mesh.dp, 1)
+    cycles = M.main_cycles(cfg)
+
+    pipe_m: List[Tuple[int, int]] = []
+    for p in ((1, 2, 4, 8) if pipe is None else (int(pipe),)):
+        if p < 1 or mesh.dp % p or p > cycles:
+            continue
+        if p == 1:
+            pipe_m.append((1, 1))
+            continue
+        b_data = max(shape.global_batch // (mesh.dp // p), 1)
+        for m in ((n_microbatch,) if n_microbatch else (p, 2 * p, 4 * p)):
+            if p <= m <= b_data and b_data % m == 0:
+                pipe_m.append((p, m))
+    if not pipe_m:
+        raise ValueError(
+            f"no valid (pipe, n_microbatch) candidates for pipe={pipe}, "
+            f"n_microbatch={n_microbatch} on dp={mesh.dp} "
+            f"({cycles} layer cycles)")
+
+    dims = [Dim("pipe_m", tuple(pipe_m)),
+            Dim("microbatch", (1, 2, 4, 8, 16, 32)),
+            Dim("attn_impl", ("dense", "chunked")),
+            Dim("remat", ("block", "none"))]
+
+    def stage_rows(p: int, m: int) -> int:
+        return max(shape.global_batch // (mesh.dp // p) // m, 1)
+
+    def evaluate(config: Dict) -> Tuple[float, float, bool]:
+        p, m = config["pipe_m"]
+        mb, attn_impl, remat = (config["microbatch"], config["attn_impl"],
+                                config["remat"])
+        if p == 1:
+            if mb > b_rep or b_rep % mb:
+                return float("inf"), float("inf"), False
+            rows = mb
+            mem = mm.train_memory(
+                cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
+                microbatch=mb, attn_impl=attn_impl, remat=remat,
+                seq_parallel=True, opt_kind=opt_kind)
+        else:
+            if mb != 1:  # m already fixes the per-pass rows
+                return float("inf"), float("inf"), False
+            rows = stage_rows(p, m)
+            mem = mm.train_memory(
+                cfg, shape, dp=mesh.dp // p, tp=mesh.tp, fsdp=fsdp,
+                microbatch=rows, attn_impl=attn_impl, remat=remat,
+                seq_parallel=True, opt_kind=opt_kind,
+                pipe=p, n_microbatch=m)
+        t = estimate_step_time(cfg, shape, mesh, remat, rows,
+                               pipe=p, n_microbatch=m, **overlap_kw)["total"]
+        # dense attention has no flash overhead; tiny bonus at short S
+        if attn_impl == "dense" and shape.seq_len <= 4096:
+            t *= 0.98
+        return t, mem.total, mem.total <= 0.9 * hbm
+
+    t_comp = {r: train_flops_per_step(cfg, shape, r)
+              / mesh.chips / mesh.chip.peak_flops for r in ("block", "none")}
+
+    def lower_bound(partial: Dict) -> float:
+        factor = 1.0
+        if "pipe_m" in partial:
+            p, m = partial["pipe_m"]
+            if p > 1:
+                factor = (m + p - 1) / m
+        return 0.98 * factor * t_comp.get(partial.get("remat"),
+                                          min(t_comp.values()))
+
+    return dims, evaluate, lower_bound
+
+
 def plan_train(cfg: ModelConfig, shape: ShapeConfig,
                mesh: MeshSpec = SINGLE_POD, *,
                sync_overlap: bool = False, bucket_mb: float = 0.0,
-               overlap_efficiency: float = 1.0) -> Plan:
+               overlap_efficiency: float = 1.0,
+               pipe: Optional[int] = None, n_microbatch: int = 0) -> Plan:
     overlap_kw = dict(sync_overlap=sync_overlap, bucket_mb=bucket_mb,
                       overlap_efficiency=overlap_efficiency)
     notes: List[str] = []
@@ -275,7 +419,6 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         notes.append(f"priced on measured constants ({mesh.chip.name}: "
                      f"{mesh.chip.peak_flops:.3g} FLOP/s achieved)")
     hbm = mesh.chip.hbm_bytes
-    b_rep = max(shape.global_batch // mesh.dp, 1)
 
     n_bytes_bf16 = 2 * mm.n_params(cfg)
     fsdp = n_bytes_bf16 / mesh.tp > 0.25 * hbm
@@ -290,38 +433,38 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         notes.append("AdamW state exceeds 55% HBM fully sharded -> "
                      "paper-era momentum SGD (4 B/param)")
 
-    # X_mini sweep (paper §3.1.3): candidate microbatches, ILP per candidate
-    best: Optional[Tuple[float, int, str, str]] = None
-    for mb in [m for m in (1, 2, 4, 8, 16, 32) if m <= b_rep and b_rep % m == 0]:
-        for attn_impl in ("dense", "chunked"):
-            for remat in ("block", "none"):
-                mem = mm.train_memory(
-                    cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
-                    microbatch=mb, attn_impl=attn_impl, remat=remat,
-                    seq_parallel=True, opt_kind=opt_kind)
-                if mem.total > 0.9 * hbm:
-                    continue
-                t = estimate_step_time(cfg, shape, mesh, remat, mb,
-                                       **overlap_kw)["total"]
-                # dense attention has no flash overhead; tiny bonus at short S
-                if attn_impl == "dense" and shape.seq_len <= 4096:
-                    t *= 0.98
-                if best is None or t < best[0]:
-                    best = (t, mb, attn_impl, remat)
-    if best is None:  # nothing fits: most frugal settings, flagged
-        best = (float("inf"), 1, "chunked", "block")
+    # Eq.-6 unified: branch-and-bound over pipeline cut x microbatch x
+    # attention x remat, priced by the roofline under the HBM bound
+    dims, evaluate, lb = train_search_space(
+        cfg, shape, mesh, fsdp=fsdp, opt_kind=opt_kind,
+        pipe=pipe, n_microbatch=n_microbatch, **overlap_kw)
+    found = search_bnb(dims, evaluate, lower_bound=lb)
+    p, n_micro = found.config["pipe_m"]
+    attn_impl, remat = found.config["attn_impl"], found.config["remat"]
+    dp_data = mesh.dp // p
+    mb = (found.config["microbatch"] if p == 1
+          else max(shape.global_batch // dp_data // n_micro, 1))
+    t_best = found.time if found.feasible else float("inf")
+    if not found.feasible:
         notes.append("NO feasible microbatch found — does not fit this mesh")
-    t_best, mb, attn_impl, remat = best
+    if p > 1:
+        cut = balanced_stage_cut(M.main_cycles(cfg), p)
+        notes.append(
+            f"1F1B pipeline: {p} stages x {n_micro} microbatches, model "
+            f"bubble {pipeline_bubble(p, n_micro):.1%}, stage cut {list(cut)}")
+    else:
+        cut = None
 
-    mem = mm.train_memory(cfg, shape, dp=mesh.dp, tp=mesh.tp, fsdp=fsdp,
+    mem = mm.train_memory(cfg, shape, dp=dp_data, tp=mesh.tp, fsdp=fsdp,
                           microbatch=mb, attn_impl=attn_impl, remat=remat,
-                          seq_parallel=True, opt_kind=opt_kind)
+                          seq_parallel=True, opt_kind=opt_kind,
+                          pipe=p, n_microbatch=n_micro if p > 1 else 0)
     fits = mem.total <= hbm
 
     # Lemma 3.2 (tier-aware): can grad sync hide behind compute, and does
     # the topology make the hierarchical schedule the better vehicle?
     sync = ps.grad_sync_plan(
-        2 * mm.n_params(cfg) / mesh.tp, _dp_tiers(mesh),
+        2 * mm.n_params(cfg) / mesh.tp / p, _dp_tiers(mesh),
         t_c=t_best if math.isfinite(t_best) else 1.0)
     notes.append(f"Lemma3.2: {sync.note}")
     if sync.bottleneck_tier:
@@ -329,7 +472,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
 
     # Lemma 3.1: overhead ratio from the non-compute roofline terms — with
     # overlap on, only the *exposed* collective share counts as overhead
-    terms = estimate_step_time(cfg, shape, mesh, remat, mb, **overlap_kw)
+    terms = estimate_step_time(cfg, shape, mesh, remat, mb,
+                               pipe=p, n_microbatch=n_micro, **overlap_kw)
     r_o = r_o_from_terms(terms)
     eff = amdahl.efficiency(mesh.chips, r_o / mesh.chips)  # R_O already aggregate
     if sync_overlap:
@@ -343,15 +487,17 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
             f"({serial:.3g}s -> {exposed:.3g}s exposed); {bound} after "
             "overlap")
     return Plan(
-        arch=cfg.name, shape=shape.name, mesh=(mesh.dp, mesh.tp), fsdp=fsdp,
+        arch=cfg.name, shape=shape.name, mesh=(dp_data, mesh.tp), fsdp=fsdp,
         microbatch=mb, attn_impl=attn_impl, remat=remat, seq_parallel=True,
         opt_kind=opt_kind, sync_schedule=sync.schedule,
         est_step_time=t_best, est_memory_gb=mem.total / 2**30, fits=fits,
-        efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp,
+        efficiency=eff, grad_bytes=4.0 * mm.n_params(cfg) / mesh.tp / p,
         topology=mesh.cluster.to_dict(),
         bottleneck_tier=sync.bottleneck_tier,
         calibrated=mesh.chip.calibrated,
-        sync_overlap=sync_overlap, bucket_mb=bucket_mb, notes=notes,
+        sync_overlap=sync_overlap, bucket_mb=bucket_mb,
+        pipe=p, n_microbatch=n_micro,
+        stage_cut=list(cut) if cut else None, notes=notes,
     )
 
 
@@ -383,9 +529,11 @@ def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
 
 def plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec = SINGLE_POD, *,
          sync_overlap: bool = False, bucket_mb: float = 0.0,
-         overlap_efficiency: float = 1.0) -> Plan:
+         overlap_efficiency: float = 1.0,
+         pipe: Optional[int] = None, n_microbatch: int = 0) -> Plan:
     if shape.kind == "train" or shape.kind == "prefill":
         return plan_train(cfg, shape, mesh, sync_overlap=sync_overlap,
                           bucket_mb=bucket_mb,
-                          overlap_efficiency=overlap_efficiency)
+                          overlap_efficiency=overlap_efficiency,
+                          pipe=pipe, n_microbatch=n_microbatch)
     return plan_decode(cfg, shape, mesh)  # decode has no gradient sync

@@ -14,6 +14,11 @@ the mesh data axis and measures what the lemma only predicts:
   instrumented training loop with a chosen strategy, times the sync phase
   separately from compute, and reports measured-vs-predicted Lemma 3.1/3.2
   numbers in a :class:`SyncReport`.
+- :mod:`repro.distributed.pipeline` — ``PipelineTrainer``: executable
+  non-interleaved 1F1B pipeline parallelism over a ``(pipe, data)`` mesh,
+  bit-identical to ``DataParallelTrainer`` on the same token stream, with
+  a measured-vs-``(p-1)/(m+p-1)`` bubble reconciliation in
+  :class:`PipelineReport`.
 - :mod:`repro.distributed.overlap` — bucketed comm/compute overlap:
   :class:`BucketPlan` partitions the gradient pytree into size-targeted,
   grad-availability-ordered sync buckets; ``DataParallelTrainer(
@@ -32,6 +37,9 @@ from repro.distributed.compression import (  # noqa: F401
 )
 from repro.distributed.overlap import (  # noqa: F401
     BucketPlan, DEFAULT_BUCKET_MB, build_bucket_plan,
+)
+from repro.distributed.pipeline import (  # noqa: F401
+    PipelineReport, PipelineTrainer,
 )
 from repro.distributed.trainer import (  # noqa: F401
     DataParallelTrainer, SyncReport,

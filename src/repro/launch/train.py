@@ -34,7 +34,8 @@ def build_spec(args) -> JobSpec:
     return JobSpec(
         arch=args.arch, reduced=args.reduced, steps=args.steps,
         batch=args.batch, seq=args.seq, lr=args.lr,
-        use_planner=args.plan, dp=args.dp, sync=args.sync,
+        use_planner=args.plan, dp=args.dp, pipe=args.pipe,
+        n_microbatch=args.microbatch, sync=args.sync,
         compress=args.compress, topology=args.topology,
         sync_overlap=args.overlap, bucket_mb=args.bucket_mb,
         tune=args.autotune, tune_cache=args.tune_cache,
@@ -62,6 +63,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--dp", type=int, default=0,
                     help="run the explicit data-parallel trainer on this many "
                          "devices (0 = single-process GSPMD loop)")
+    ap.add_argument("--pipe", type=int, default=0,
+                    help="1F1B pipeline stages (devices split pipe x data; "
+                         "0/1 = no pipelining). With --dp N, N is the total "
+                         "device count of the (pipe, data) grid")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="1F1B microbatches per step (>= --pipe; 0 = pipe)")
     ap.add_argument("--sync", default="auto",
                     help="gradient-sync strategy, or 'auto' to resolve the "
                          "planner's sync_schedule")
@@ -127,6 +134,12 @@ def main():
                   f"{s['overlap_fraction']:.0%} of sync "
                   f"(exposed {s['exposed_comm_time']*1e3:.1f}ms of "
                   f"{s['measured_comm_s']*1e3:.1f}ms serial)")
+    if "pipeline" in rep.measured:
+        pr = rep.measured["pipeline"]
+        print(f"pipeline: {pr['pipe']} stages x {pr['n_microbatch']} "
+              f"microbatches, bubble measured {pr['bubble_measured']:.3f} "
+              f"vs model {pr['bubble_model']:.3f} "
+              f"(serial {pr['bubble_serial']:.3f})")
     m = rep.measured
     losses = m["losses"]
     print(f"loss {np.mean(losses[:5]):.4f} -> {np.mean(losses[-5:]):.4f}; "

@@ -106,6 +106,44 @@ def test_kc_mla_decode_wide_lane_is_admitted():
     assert not findings and kernel_contracts.check_contract(c) == []
 
 
+def test_kc107_stage_overflow_fires_on_tiny_hbm():
+    # known-bad fixture: a 2 GiB chip cannot hold granite's pipe=4 stage
+    # working set at m=64 — every stage must flag
+    import dataclasses
+
+    from repro.configs.base import get_config, get_shape
+    from repro.core.hardware import TPU_V5E
+
+    tiny = dataclasses.replace(TPU_V5E, hbm_bytes=2 * 2 ** 30,
+                               name="tiny-hbm")
+    found = kernel_contracts.pipeline_stage_findings(
+        get_config("granite-3-2b"), get_shape("train_4k"),
+        pipe=4, n_microbatch=64, dp=2, chip=tiny, context="fixture")
+    assert found and codes(found) == ["KC107"]
+
+
+def test_kc107_uncuttable_pipe_is_a_finding():
+    from repro.configs.base import get_config, get_shape
+
+    cfg = get_config("granite-3-2b")
+    cycles = (cfg.num_layers - cfg.first_k_dense) // len(cfg.pattern)
+    found = kernel_contracts.pipeline_stage_findings(
+        cfg, get_shape("train_4k"), pipe=cycles + 1,
+        n_microbatch=2 * (cycles + 1), dp=1, context="fixture")
+    assert codes(found) == ["KC107"]
+    assert "non-empty stages" in found[0].message
+
+
+def test_kc107_pipeline_registry_clean_and_audited():
+    findings, audit = kernel_contracts.check_pipeline_registry()
+    assert findings == [], [str(f) for f in findings]
+    # non-vacuous: the Eq.-5 gate admits cells at both pipe depths
+    cells = audit["pipeline_stage"]
+    assert len(cells) >= 3, cells
+    depths = {c.split(":")[3] for c in cells}
+    assert {"p2", "p4"} <= depths, cells
+
+
 # ---------------------------------------------------------------------------
 # Determinism (DT1xx)
 # ---------------------------------------------------------------------------
@@ -265,6 +303,17 @@ def test_mx_variable_axis_is_skipped():
             return jax.lax.psum(g, axis)
     """)
     assert mesh_axes.analyze_sources([("src/repro/var.py", src)]) == []
+
+
+def test_mx_repo_declares_the_pipe_axis():
+    """The 1F1B trainer's (pipe, data) grid must keep the ``pipe`` axis in
+    the repo-global declared set — a rename there would silently orphan
+    any collective that reduces over it."""
+    axes = set()
+    for p in sorted((REPO / "src" / "repro").rglob("*.py")):
+        axes |= mesh_axes.declared_axes(
+            p.read_text(), p.relative_to(REPO).as_posix())
+    assert {"data", "nodes", "pipe"} <= axes, sorted(axes)
 
 
 # ---------------------------------------------------------------------------

@@ -127,6 +127,54 @@ def test_golden_train_rejects_sync_overlap_mutations():
         validate_report(d)
 
 
+def test_goldens_cover_the_pipe_fields():
+    """The plan golden is a *pipelined* plan: it pins the Plan's 1F1B
+    fields (pipe/n_microbatch/stage_cut), the priced p2p + bubble roofline
+    terms, and the predicted pipeline block."""
+    plan = _load("report_v1_plan.json")
+    p = plan["plan"]
+    assert p["pipe"] == 2 and p["n_microbatch"] >= p["pipe"]
+    cut = p["stage_cut"]
+    assert cut[0] == 0 and len(cut) == p["pipe"] + 1
+    assert cut == sorted(cut) and all(b > a for a, b in zip(cut, cut[1:]))
+    terms = plan["predicted"]["step_time_terms"]
+    assert terms["collective_p2p"] > 0
+    assert 0 < terms["pipeline_bubble"] < 1
+    pp = plan["predicted"]["pipeline"]
+    assert pp["pipe"] == p["pipe"]
+    assert pp["bubble_model"] == pytest.approx(
+        (p["pipe"] - 1) / (p["n_microbatch"] + p["pipe"] - 1))
+
+
+def test_golden_plan_rejects_pipe_mutations():
+    """Single-field corruptions of the pipeline shape must each be
+    rejected: a microbatch count below the stage count (1F1B cannot fill
+    its warmup), and a stage count that breaks ``pipe * dp * tp == world``
+    against the plan's own topology."""
+    golden = _load("report_v1_plan.json")
+    d = copy.deepcopy(golden)
+    d["plan"]["n_microbatch"] = d["plan"]["pipe"] - 1
+    with pytest.raises(ValueError):
+        validate_report(d)
+    d = copy.deepcopy(golden)
+    d["plan"].pop("n_microbatch")
+    with pytest.raises(ValueError):
+        validate_report(d)
+    d = copy.deepcopy(golden)
+    d["plan"]["pipe"] = d["plan"]["pipe"] * 2  # pipe*dp*tp != world now
+    with pytest.raises(ValueError):
+        validate_report(d)
+    d = copy.deepcopy(golden)
+    d["plan"]["pipe"] = 0
+    with pytest.raises(ValueError):
+        validate_report(d)
+    # legacy plan dicts (no pipe field at all) still validate: the check
+    # is conditional, migration fills the no-pipelining defaults
+    d = copy.deepcopy(golden)
+    d["plan"].pop("pipe")
+    validate_report(d)
+
+
 def test_golden_tuning_rejects_section_mutations():
     golden = _load("tuning_v1.json")
     for key in _TUNING_REQUIRED:
