@@ -2,7 +2,7 @@
 
 The repo's bit-identity contracts (overlap sync, continuous-vs-static
 serving) only hold if nothing in a measured path consults an unseeded RNG
-or a second wall clock.  Three rules:
+or a second wall clock.  Four rules:
 
 - **DT101** — unseeded randomness: legacy ``np.random.*`` global-RNG
   calls, zero-arg ``np.random.default_rng()``, zero-arg
@@ -19,6 +19,14 @@ or a second wall clock.  Three rules:
   values — each is a device->host sync that serializes the very overlap
   the collective schedule exists to create.  (``int()`` is deliberately
   not flagged: it is used on static shapes, not on device values.)
+- **DT104** — non-atomic checkpoint writes: inside
+  ``src/repro/checkpoint/``, a function that persists state
+  (``np.savez``/``np.save``, ``json.dump``, ``.write_text``/
+  ``.write_bytes``) must also call ``os.replace``/``os.rename`` (or
+  ``Path.replace``) in the same function — i.e. it wrote a tmp file and
+  atomically renamed it.  A bare write can be torn by a crash, which is
+  exactly the corruption the elastic-checkpoint protocol
+  (``repro.checkpoint.io``) exists to rule out.
 
 The pass resolves import aliases per module (``import numpy as np``,
 ``from time import perf_counter as pc``) so renamed imports cannot dodge
@@ -56,20 +64,31 @@ RANDOM_MODULE_FNS = {
 COLLECTIVES = {"psum", "pmean", "pmax", "pmin", "psum_scatter",
                "all_gather", "ppermute", "all_to_all"}
 HOST_SYNC = {"numpy.asarray", "numpy.array", "jax.device_get"}
+# DT104: the checkpoint subtree where every persistent write must pair with
+# an atomic rename in the same function
+DT104_PREFIX = "src/repro/checkpoint/"
+PERSIST_WRITES = {"numpy.savez", "numpy.savez_compressed", "numpy.save",
+                  "json.dump"}
+PERSIST_WRITE_METHODS = {"write_text", "write_bytes"}
+ATOMIC_RENAMES = {"os.replace", "os.rename"}
 
 
 class _Scope:
-    __slots__ = ("name", "has_collective", "sync_calls")
+    __slots__ = ("name", "has_collective", "sync_calls", "writes",
+                 "has_rename")
 
     def __init__(self, name: str):
         self.name = name
         self.has_collective = False
         self.sync_calls: List[Tuple[int, str]] = []
+        self.writes: List[Tuple[int, str]] = []
+        self.has_rename = False
 
 
 class _Visitor(ast.NodeVisitor):
     def __init__(self, path: str):
         self.path = path
+        self._ckpt = path.startswith(DT104_PREFIX)
         self.aliases: Dict[str, str] = {}  # local name -> dotted origin
         self.stack: List[str] = []
         self.scopes: List[_Scope] = []
@@ -135,6 +154,15 @@ class _Visitor(ast.NodeVisitor):
                                 "function forces a device->host sync that "
                                 "serializes comm/compute overlap",
                         context=sc.name))
+            if sc.writes and not sc.has_rename:
+                for line, what in sc.writes:
+                    self.findings.append(Finding(
+                        path=self.path, line=line, code="DT104",
+                        message=f"{what} persists checkpoint state with no "
+                                "os.replace/os.rename in the same function; "
+                                "write a tmp file and atomically rename it "
+                                "so a crash cannot leave a torn file",
+                        context=sc.name))
         self.stack.pop()
 
     def visit_FunctionDef(self, node): self._enter(node, True)
@@ -180,7 +208,23 @@ class _Visitor(ast.NodeVisitor):
                 and node.func.attr == "item" and not node.args
                 and self.scopes):
             self.scopes[-1].sync_calls.append((node.lineno, ".item()"))
+        if self._ckpt and self.scopes:
+            self._check_dt104(node, dotted)
         self.generic_visit(node)
+
+    def _check_dt104(self, node: ast.Call, dotted: Optional[str]) -> None:
+        sc = self.scopes[-1]
+        if dotted in PERSIST_WRITES:
+            sc.writes.append((node.lineno, f"{dotted}()"))
+        elif dotted in ATOMIC_RENAMES:
+            sc.has_rename = True
+        elif isinstance(node.func, ast.Attribute):
+            if node.func.attr in PERSIST_WRITE_METHODS:
+                sc.writes.append((node.lineno, f".{node.func.attr}()"))
+            elif (node.func.attr == "replace" and dotted is None
+                    and len(node.args) == 1):
+                # Path.replace(target) is the same atomic rename syscall
+                sc.has_rename = True
 
     def _check_dt101(self, node: ast.Call, dotted: str) -> None:
         if dotted == "numpy.random.default_rng":

@@ -41,10 +41,13 @@ def known_schema_ids() -> Dict[str, str]:
     from repro.analysis import findings as an_findings
     from repro.api import campaign as api_campaign
     from repro.api import report as api_report
+    from repro.checkpoint import io as ckpt_io
     from repro.core import autotune as core_autotune
     from repro.obs import metrics as obs_metrics
 
     ids = {
+        ckpt_io.MANIFEST_SCHEMA_ID:
+            "repro.checkpoint.io:validate_manifest",
         api_report.SCHEMA_ID: "repro.api.report:validate_report",
         api_report.TUNING_SCHEMA_ID: "repro.api.report:_validate_tuning",
         api_report.SERVING_SCHEMA_ID: "repro.api.report:_validate_serving",

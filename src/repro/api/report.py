@@ -134,6 +134,14 @@ def validate_report(d: Dict[str, Any]) -> Dict[str, Any]:
         _validate_serving(d["measured"]["serving"])
     if "sync" in d["measured"]:
         _validate_sync(d["measured"]["sync"])
+    if "async_ps" in d["measured"]:
+        _validate_async(d["measured"]["async_ps"])
+    spec = d["spec"]
+    if (d["kind"] in ("train", "bench")
+            and (spec.get("staleness") or spec.get("backup_workers"))):
+        _require("async_ps" in d["measured"],
+                 f"kind {d['kind']!r} with spec.staleness/backup_workers "
+                 "must carry a measured.async_ps section")
     if "metrics" in d["measured"]:
         # any report may carry telemetry; delegate to repro.obs.metrics
         validate_metrics(d["measured"]["metrics"])
@@ -197,6 +205,43 @@ def _validate_sync(s: Any):
     _require(float(s["exposed_comm_time"])
              <= float(s["measured_comm_s"]) + 1e-12,
              "sync.exposed_comm_time exceeds the serial measured_comm_s")
+
+
+# the bounded-staleness async-PS section under measured["async_ps"] (see
+# repro.distributed.async_ps.AsyncPSReport and docs/checkpointing.md)
+_ASYNC_REQUIRED = ("staleness", "backup_workers", "dp", "steps", "refreshes",
+                   "mean_age", "max_age", "drops", "t_step_model")
+
+
+def _validate_async(a: Any):
+    """Schema check for a measured AsyncPSReport dict: staleness bounds the
+    measured worker-param ages (the trainer's core invariant), drops are
+    consistent with the backup-worker count, and the cost-model terms from
+    :func:`repro.core.ps.async_step_time` ride along."""
+    _require(isinstance(a, dict),
+             f"measured.async_ps must be a dict, got {type(a).__name__}")
+    for key in _ASYNC_REQUIRED:
+        _require(key in a, f"measured.async_ps missing {key!r}")
+    s = a["staleness"]
+    _require(isinstance(s, int) and s >= 0,
+             f"async_ps.staleness must be an int >= 0, got {s!r}")
+    _require(float(a["max_age"]) <= s + 1e-12,
+             f"async_ps.max_age {a['max_age']!r} exceeds the staleness "
+             f"bound {s} — the trainer's invariant is broken")
+    _require(0.0 <= float(a["mean_age"]) <= float(a["max_age"]) + 1e-12,
+             "async_ps.mean_age must be in [0, max_age]")
+    k = a["backup_workers"]
+    _require(isinstance(k, int) and 0 <= k < int(a["dp"]),
+             f"async_ps.backup_workers must be in [0, dp), got {k!r}")
+    _require(int(a["drops"]) == k * int(a["steps"]),
+             f"async_ps.drops {a['drops']!r} != backup_workers * steps "
+             f"({k} * {a['steps']!r})")
+    model = a["t_step_model"]
+    _require(isinstance(model, dict),
+             f"async_ps.t_step_model must be a dict, "
+             f"got {type(model).__name__}")
+    for key in ("push", "pull", "straggler_wait", "efficiency", "wall_step"):
+        _require(key in model, f"async_ps.t_step_model missing {key!r}")
 
 
 # the ``repro.api/serving/v1`` section: scheduler configuration, KV-block

@@ -132,6 +132,8 @@ class Session:
             self._plan = plan_fn(self.cfg_full, self.shape, self.mesh_spec,
                                  pipe=self.spec.pipe or None,
                                  n_microbatch=self.spec.n_microbatch,
+                                 staleness=self.spec.staleness,
+                                 backup_workers=self.spec.backup_workers,
                                  **self._overlap_kwargs())
         return self._plan
 
@@ -253,7 +255,7 @@ class Session:
                        seed=spec.seed, log_every=spec.log_every,
                        ckpt_dir=spec.ckpt_dir or None,
                        ckpt_every=spec.ckpt_every)
-        sync_rep = pipe_rep = None
+        sync_rep = pipe_rep = async_rep = None
         if spec.pipe > 1:
             import dataclasses as _dc
 
@@ -281,6 +283,30 @@ class Session:
             res = trainer.train(**loop_kw)
             sync_rep = trainer.report()
             pipe_rep = trainer.pipeline_report()
+        elif spec.dp and (spec.staleness or spec.backup_workers):
+            import jax
+
+            from repro.distributed import AsyncPSTrainer
+
+            devs = jax.devices()
+            if len(devs) < spec.dp:
+                raise RuntimeError(
+                    f"dp={spec.dp} but only {len(devs)} devices visible; set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{spec.dp}")
+            # bounded staleness is a parameter-server schedule by
+            # construction; "auto" resolves to it rather than the planner's
+            # all-reduce pick
+            strategy = ("parameter_server" if spec.sync == "auto"
+                        else spec.sync)
+            trainer = AsyncPSTrainer(
+                self.cfg, run, opt, staleness=spec.staleness,
+                backup_workers=spec.backup_workers, strategy=strategy,
+                compression=spec.compress, devices=devs[:spec.dp],
+                tracer=tracer, metrics=metrics)
+            res = trainer.train(**loop_kw)
+            sync_rep = trainer.report()
+            async_rep = trainer.async_report()
         elif spec.dp:
             import jax
 
@@ -327,6 +353,8 @@ class Session:
             measured["sync"] = sync_rep.as_dict()
         if pipe_rep is not None:
             measured["pipeline"] = pipe_rep.as_dict()
+        if async_rep is not None:
+            measured["async_ps"] = async_rep.as_dict()
         if spec.tune:  # the run adopted tuned knobs: record what they were
             measured["tuning"] = self.tuned.section()
         measured["metrics"] = metrics.section()
@@ -716,6 +744,13 @@ class Session:
                 # tier-aware PS placement: B_ps in-node vs cross-node
                 out["lemma32"]["ps_placement"] = ps_lib.ps_placement_plan(
                     p.grad_bytes, dp, cluster, max(t_c, 1e-9))
+            if self.spec.staleness or self.spec.backup_workers:
+                # bounded-staleness refinement: pull traffic amortized over
+                # s+1 steps, straggler wait bought back by backup workers
+                out["lemma32"]["async_ps"] = ps_lib.async_step_time(
+                    p.grad_bytes, dp, n_ps, p.link_bw, max(t_c, 1e-9),
+                    staleness=self.spec.staleness,
+                    backup_workers=self.spec.backup_workers)
         return out
 
     def report_meta(self) -> Dict[str, Any]:

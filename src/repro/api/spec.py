@@ -56,6 +56,10 @@ class JobSpec:
                                   # overlap-aware cost model)
     bucket_mb: float = 0.0        # sync-bucket size target [MiB]; 0 = the
                                   # shared default (core.ps.DEFAULT_BUCKET_MB)
+    staleness: int = 0            # bounded-staleness async PS: max worker
+                                  # params age in steps (0 = synchronous)
+    backup_workers: int = 0       # drop the slowest k of dp gradients per
+                                  # step (0 = wait for every worker)
     ckpt_dir: str = ""
     ckpt_every: int = 0
     log_every: int = 10
@@ -128,6 +132,21 @@ class JobSpec:
             raise ValueError("bucket_mb must be >= 0 (0 = default bucket size)")
         if self.dp and self.batch % self.dp:
             raise ValueError(f"batch {self.batch} not divisible by dp={self.dp}")
+        if self.staleness < 0 or self.backup_workers < 0:
+            raise ValueError("staleness and backup_workers must be >= 0")
+        if self.staleness or self.backup_workers:
+            if not self.dp:
+                raise ValueError("staleness/backup_workers need an explicit "
+                                 "data-parallel trainer: set dp > 0")
+            if self.pipe > 1:
+                raise ValueError("async PS assumes one flat data axis; "
+                                 "incompatible with pipe > 1")
+            if self.sync_overlap:
+                raise ValueError("staleness already amortizes the pull "
+                                 "traffic; incompatible with sync_overlap")
+            if self.backup_workers >= self.dp:
+                raise ValueError(f"backup_workers {self.backup_workers} must "
+                                 f"be < dp {self.dp}")
 
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "JobSpec":

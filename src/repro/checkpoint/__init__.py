@@ -1,0 +1,18 @@
+"""Crash-safe, elastic checkpointing.
+
+:mod:`repro.checkpoint.io` holds the synchronous primitives (atomic
+``save`` / ``latest_step`` / ``restore``); ``CheckpointManager`` adds
+serialized async saves with ``wait()`` semantics.
+"""
+from repro.checkpoint.io import (MANIFEST_SCHEMA_ID, latest_step, restore,
+                                 save, validate_manifest)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "MANIFEST_SCHEMA_ID",
+    "CheckpointManager",
+    "latest_step",
+    "restore",
+    "save",
+    "validate_manifest",
+]

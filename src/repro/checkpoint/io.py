@@ -1,80 +1,264 @@
-"""Sharded checkpointing without external deps: one .npz per host plus a
-JSON manifest. Leaves are flattened by pytree path; restore rebuilds the
-tree and re-shards via device_put. Async save uses a background thread so
-checkpoint I/O hides behind compute (the same pipelining doctrine as the
-data path)."""
+"""Crash-safe sharded checkpointing without external deps.
+
+One ``.npz`` + one ``.meta.json`` per step, plus a top-level
+``manifest.json`` pointing at the newest complete step.  Leaves are
+flattened by pytree path; restore rebuilds the tree and re-shards via
+``device_put`` onto the *template's* shardings — the on-disk layout is
+purely logical (path-keyed arrays + their true dtypes), so the same
+checkpoint restores onto any ``(dp, pipe)`` grid whose logical tree
+matches (elastic resume).
+
+Atomicity protocol (every write in this module follows it):
+
+1. write the payload to ``<name>.tmp.<pid>`` in the same directory,
+2. ``os.replace`` it over the final name — atomic on POSIX, so a crash
+   mid-write leaves only a dead tmp file, never a torn checkpoint;
+3. the step's ``.meta.json`` is replaced only *after* its ``.npz``, and
+   ``manifest.json`` only after both — readers that follow
+   :func:`latest_step` can therefore never observe a partial step;
+4. the manifest is step-monotonic: a slow (async) save of step N that
+   finishes after step N+1's save must not move the pointer backwards.
+
+Non-native dtypes (bfloat16 and friends from ml_dtypes, which
+``np.savez`` would silently pickle as object arrays or reject) are stored
+as an unsigned-integer view of the raw bits with the true dtype recorded
+in the step's meta, and restored exactly.
+
+Async saves live in :class:`repro.checkpoint.manager.CheckpointManager`
+(one serialized writer thread + ``wait()``); the functions here are
+synchronous primitives.
+"""
 from __future__ import annotations
 
 import json
-import threading
+import os
 from pathlib import Path
-from typing import Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.obs.trace import monotonic
 
+MANIFEST_SCHEMA_ID = "repro.checkpoint/manifest/v1"
+
+# dtype kinds np.savez round-trips natively; anything else (ml_dtypes'
+# bfloat16/fp8 register kind 'V') goes through the bit-pattern view
+_NATIVE_KINDS = set("biufc?")
+_UINT_BY_ITEMSIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def validate_manifest(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Raise ValueError unless ``d`` is a valid ``MANIFEST_SCHEMA_ID``
+    payload; returns it.  The id covers both on-disk JSON shapes: the
+    top-level ``manifest.json`` pointer (``keys`` + ``written_s``) and a
+    step's ``.meta.json`` (per-key ``layout``)."""
+    if not isinstance(d, dict):
+        raise ValueError(f"manifest must be a dict, got {type(d).__name__}")
+    if d.get("schema") != MANIFEST_SCHEMA_ID:
+        raise ValueError(f"manifest schema {d.get('schema')!r} != "
+                         f"{MANIFEST_SCHEMA_ID!r}")
+    step = d.get("step")
+    if not isinstance(step, int) or step < 0:
+        raise ValueError(f"manifest step must be an int >= 0, got {step!r}")
+    if "layout" in d:
+        if not isinstance(d["layout"], dict):
+            raise ValueError("meta layout must be a dict")
+        for key, entry in d["layout"].items():
+            for want in ("shape", "dtype", "stored_dtype"):
+                if want not in entry:
+                    raise ValueError(f"layout[{key!r}] missing {want!r}")
+    elif "keys" in d:
+        keys = d["keys"]
+        if (not isinstance(keys, list)
+                or any(not isinstance(k, str) for k in keys)):
+            raise ValueError("manifest keys must be a list of strings")
+    else:
+        raise ValueError("manifest payload has neither 'keys' (pointer) "
+                         "nor 'layout' (step meta)")
+    return d
+
+
+def _step_npz(d: Path, step: int) -> Path:
+    return d / f"step_{step:08d}.npz"
+
+
+def _step_meta(d: Path, step: int) -> Path:
+    return d / f"step_{step:08d}.meta.json"
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
         flat[key] = np.asarray(leaf)
     return flat
 
 
-def save(tree, directory: str, step: int, *, blocking: bool = True):
+def _storage_view(arr: np.ndarray) -> Tuple[np.ndarray, str, str]:
+    """(storable array, true dtype name, stored dtype name).  Native
+    dtypes pass through; extension dtypes (bf16, ...) become a same-width
+    unsigned-int view so the npz holds raw bits, never pickled objects."""
+    if arr.dtype.kind in _NATIVE_KINDS:
+        return arr, arr.dtype.name, arr.dtype.name
+    uint = _UINT_BY_ITEMSIZE[arr.dtype.itemsize]
+    return arr.view(uint), arr.dtype.name, np.dtype(uint).name
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype by name, including the ml_dtypes extension family."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _atomic_write_manifest(d: Path, step: int, keys, written_s: float):
+    """Move the latest-step pointer forward — never backward: a slow async
+    save of step N landing after step N+1 must not clobber the newer
+    manifest.  tmp + ``os.replace`` keeps the pointer itself untearable."""
+    path = d / "manifest.json"
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+        except (OSError, ValueError):
+            prev = {}
+        if int(prev.get("step", -1)) >= step:
+            return
+    manifest = {
+        "schema": MANIFEST_SCHEMA_ID,
+        "step": step,
+        "keys": sorted(keys),
+        "written_s": round(written_s, 3),
+    }
+    tmp = d / f"manifest.json.tmp.{os.getpid()}"
+    tmp.write_text(json.dumps(manifest, indent=1))
+    os.replace(tmp, path)
+
+
+def _write_step(d: Path, step: int, flat: Dict[str, np.ndarray]):
+    """One complete step: npz (bit-pattern views), then its meta (logical
+    layout), then the manifest pointer — each atomically, in that order."""
+    t0 = monotonic()
+    stored: Dict[str, np.ndarray] = {}
+    layout: Dict[str, Dict[str, Any]] = {}
+    for key, arr in flat.items():
+        view, true_dtype, stored_dtype = _storage_view(arr)
+        stored[key] = view
+        layout[key] = {"shape": list(arr.shape), "dtype": true_dtype,
+                       "stored_dtype": stored_dtype}
+    npz = _step_npz(d, step)
+    tmp = npz.with_suffix(f".npz.tmp.{os.getpid()}")
+    with open(tmp, "wb") as f:
+        np.savez(f, **stored)
+    os.replace(tmp, npz)
+    meta = {"schema": MANIFEST_SCHEMA_ID, "step": step, "layout": layout}
+    mtmp = _step_meta(d, step).with_suffix(f".json.tmp.{os.getpid()}")
+    mtmp.write_text(json.dumps(meta, indent=1))
+    os.replace(mtmp, _step_meta(d, step))
+    _atomic_write_manifest(d, step, flat.keys(), monotonic() - t0)
+
+
+def save(tree, directory: str, step: int) -> None:
+    """Blocking atomic save of ``tree`` as checkpoint ``step``.
+
+    The old ``blocking=False`` raw-``Thread`` API is gone — its daemon
+    writer was silently killed at interpreter exit and two overlapping
+    saves raced on the manifest.  Use
+    :class:`repro.checkpoint.manager.CheckpointManager` for serialized
+    async saves with ``wait()``.
+    """
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
-    flat = _flatten(tree)
+    _write_step(d, int(step), _flatten(tree))
 
-    def write():
-        t0 = monotonic()
-        np.savez(d / f"step_{step:08d}.npz", **flat)
-        manifest = {
-            "step": step,
-            "keys": sorted(flat),
-            "written_s": round(monotonic() - t0, 3),
-        }
-        (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
 
-    if blocking:
-        write()
-        return None
-    t = threading.Thread(target=write, daemon=True)
-    t.start()
-    return t
+def _complete_steps(d: Path):
+    """Steps whose npz AND meta both exist, ascending — the only states a
+    reader may observe as restorable."""
+    steps = []
+    for p in sorted(d.glob("step_*.npz")):
+        try:
+            step = int(p.stem.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if _step_meta(d, step).exists():
+            steps.append(step)
+    return steps
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest *complete* step, or None.  The manifest pointer is only
+    trusted when its step's files actually exist — a crash between the
+    npz landing and the manifest moving (or a deleted step) falls back to
+    a directory scan for the last valid step."""
     d = Path(directory)
-    if not (d / "manifest.json").exists():
-        return None
-    return json.loads((d / "manifest.json").read_text())["step"]
+    manifest = d / "manifest.json"
+    if manifest.exists():
+        try:
+            step = int(json.loads(manifest.read_text())["step"])
+        except (OSError, ValueError, KeyError):
+            step = None
+        if step is not None and _step_npz(d, step).exists() \
+                and _step_meta(d, step).exists():
+            return step
+    steps = _complete_steps(d)
+    return steps[-1] if steps else None
+
+
+def _load_layout(d: Path, step: int) -> Dict[str, Dict[str, Any]]:
+    meta = json.loads(_step_meta(d, step).read_text())
+    return meta.get("layout", {})
 
 
 def restore(template, directory: str, step: Optional[int] = None):
-    """Restore into the structure (and shardings, if any) of ``template``."""
+    """Restore into the structure (and shardings, if any) of ``template``.
+
+    Returns ``(tree, step)``.  Key-set mismatches between the checkpoint
+    and the template raise a single ``ValueError`` listing every missing
+    and extra key (instead of a bare ``KeyError`` mid-loop); dtypes come
+    back exactly as saved via the recorded layout.
+    """
     d = Path(directory)
-    step = latest_step(directory) if step is None else step
+    step = latest_step(directory) if step is None else int(step)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
-    data = np.load(d / f"step_{step:08d}.npz")
+    npz = _step_npz(d, step)
+    if not npz.exists() or not _step_meta(d, step).exists():
+        raise FileNotFoundError(f"checkpoint step {step} incomplete in "
+                                f"{directory} (npz or meta missing)")
+    layout = _load_layout(d, step)
+    data = np.load(npz)
 
-    keys = iter(sorted(data.files))
     flat_template, treedef = jax.tree_util.tree_flatten_with_path(template)
-    by_key = {}
-    for path, leaf in flat_template:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        by_key[key] = leaf
+    tmpl_keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path) for path, _ in flat_template]
+    ckpt_keys = set(data.files)
+    missing = sorted(set(tmpl_keys) - ckpt_keys)
+    extra = sorted(ckpt_keys - set(tmpl_keys))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint step {step} in {directory} does not match the "
+            f"template tree: missing from checkpoint {missing or '[]'}; "
+            f"extra in checkpoint {extra or '[]'}")
     out = []
-    for path, leaf in flat_template:
-        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    for key, (path, leaf) in zip(tmpl_keys, flat_template):
         arr = data[key]
+        entry = layout.get(key)
+        if entry and entry["dtype"] != entry.get("stored_dtype",
+                                                 entry["dtype"]):
+            arr = arr.view(_resolve_dtype(entry["dtype"]))
         sharding = getattr(leaf, "sharding", None)
         if sharding is not None and hasattr(sharding, "mesh"):
             out.append(jax.device_put(arr, sharding))
-        else:
+        elif sharding is not None:
             out.append(jax.device_put(arr))
+        else:
+            # host (numpy) template: hand back the stored bits untouched —
+            # device_put would canonicalize dtypes (int64 -> int32 without
+            # x64) and break the exact round-trip
+            out.append(np.ascontiguousarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out), step

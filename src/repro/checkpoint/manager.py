@@ -1,0 +1,130 @@
+"""Serialized async checkpointing on top of :mod:`repro.checkpoint.io`.
+
+The seed-era ``save(blocking=False)`` returned a raw ``daemon=True``
+thread: interpreter exit could kill it mid-write, and two overlapping
+saves raced on ``manifest.json``.  ``CheckpointManager`` replaces that
+API with one long-lived writer thread fed by a queue — saves are
+serialized in submission order, ``wait()`` blocks until the queue is
+drained, and an ``atexit`` hook drains it before the interpreter goes
+away so a non-blocking save near the end of a run still lands on disk.
+
+Leaves are materialized to host numpy arrays on the *caller's* thread at
+enqueue time, so the writer never touches live device buffers (a later
+donated/updated param cannot corrupt an in-flight save).
+"""
+from __future__ import annotations
+
+import atexit
+import queue
+import threading
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+
+class CheckpointManager:
+    """Atomic, serialized, optionally-async checkpoint saves.
+
+    Parameters
+    ----------
+    directory:
+        Where step files and the manifest live (created on first save).
+    """
+
+    def __init__(self, directory: str):
+        self.directory = str(directory)
+        self._queue: "queue.Queue" = queue.Queue()
+        self._last_step: Optional[int] = None
+        self._errors: list = []
+        self._lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        self._closed = False
+        atexit.register(self.close)
+
+    # -- internals -------------------------------------------------------
+    def _ensure_worker(self):
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(
+                target=self._drain, name="ckpt-writer", daemon=True)
+            self._worker.start()
+
+    def _drain(self):
+        while True:
+            item = self._queue.get()
+            try:
+                if item is None:
+                    return
+                step, flat = item
+                ckpt_io._write_step(ckpt_io.Path(self.directory), step, flat)
+            except Exception as exc:  # surfaced on wait()/next save
+                with self._lock:
+                    self._errors.append(exc)
+            finally:
+                self._queue.task_done()
+
+    def _raise_pending(self):
+        with self._lock:
+            if self._errors:
+                exc = self._errors[0]
+                self._errors.clear()
+                raise RuntimeError("async checkpoint save failed") from exc
+
+    # -- public API ------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Save ``tree`` as checkpoint ``step``.
+
+        Steps must be strictly increasing per manager; the flatten (and
+        device→host copy) happens here, synchronously, so the caller may
+        immediately mutate or donate the arrays it passed in.
+        """
+        if self._closed:
+            raise RuntimeError("CheckpointManager is closed")
+        step = int(step)
+        if self._last_step is not None and step <= self._last_step:
+            raise ValueError(
+                f"checkpoint steps must be strictly increasing: got {step} "
+                f"after {self._last_step}")
+        self._raise_pending()
+        self._last_step = step
+        flat = ckpt_io._flatten(tree)
+        d = ckpt_io.Path(self.directory)
+        d.mkdir(parents=True, exist_ok=True)
+        if blocking:
+            ckpt_io._write_step(d, step, flat)
+            return
+        # np.asarray in _flatten can be a zero-copy VIEW (numpy leaves, CPU
+        # jax buffers); an async save must own its bits before the caller
+        # mutates or donates them
+        flat = {k: np.array(v, copy=True) for k, v in flat.items()}
+        self._ensure_worker()
+        self._queue.put((step, flat))
+
+    def wait(self) -> None:
+        """Block until every queued save has hit the disk (then re-raise
+        the first writer-thread failure, if any)."""
+        self._queue.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        """Drain outstanding saves and stop the writer thread.  Idempotent;
+        also runs via ``atexit`` so shutdown never loses a queued save."""
+        if self._closed:
+            return
+        self._queue.join()
+        if self._worker is not None and self._worker.is_alive():
+            self._queue.put(None)
+            self._worker.join(timeout=30.0)
+        self._closed = True
+        atexit.unregister(self.close)
+        self._raise_pending()
+
+    def latest_step(self) -> Optional[int]:
+        return ckpt_io.latest_step(self.directory)
+
+    def restore(self, template, step: Optional[int] = None):
+        """See :func:`repro.checkpoint.io.restore`; waits for queued saves
+        first so a restore never misses a save submitted before it."""
+        self.wait()
+        return ckpt_io.restore(template, self.directory, step)

@@ -20,7 +20,7 @@ import dataclasses
 import json
 import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import amdahl, memory_model as mm, ps
@@ -68,6 +68,12 @@ class Plan:
     pipe: int = 1
     n_microbatch: int = 1
     stage_cut: Optional[List[int]] = None
+    # bounded-staleness async PS (repro.distributed.async_ps): max worker
+    # params age in steps (0 = synchronous) and slowest-k gradient drops
+    # per step.  Legacy plan dicts migrate to the synchronous defaults
+    # through from_dict's known-field filter.
+    staleness: int = 0
+    backup_workers: int = 0
     notes: List[str] = field(default_factory=list)
 
     def run_config_kwargs(self) -> Dict:
@@ -81,7 +87,8 @@ class Plan:
         return dict(self.run_config_kwargs(), opt_kind=self.opt_kind,
                     sync=self.sync_schedule, sync_overlap=self.sync_overlap,
                     bucket_mb=self.bucket_mb, pipe=self.pipe,
-                    n_microbatch=self.n_microbatch)
+                    n_microbatch=self.n_microbatch, staleness=self.staleness,
+                    backup_workers=self.backup_workers)
 
     # -- topology view -----------------------------------------------------
     @property
@@ -226,7 +233,10 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
                        sync_overlap: bool = False, bucket_mb: float = 0.0,
                        overlap_efficiency: float = 1.0,
                        pipe: int = 1,
-                       n_microbatch: int = 0) -> Dict[str, float]:
+                       n_microbatch: int = 0,
+                       staleness: int = 0,
+                       backup_workers: int = 0,
+                       mean_delay: float = 0.0) -> Dict[str, float]:
     """Napkin roofline terms [s].  With ``sync_overlap`` the gradient-sync
     collective is priced through the bucketed-overlap model
     (:func:`repro.core.ps.overlap_exposed_comm`): only the comm that sticks
@@ -242,7 +252,16 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     (``pipeline_bubble``), each stage holds and syncs ``1/pipe`` of the
     params, per-stage param re-reads scale with the microbatch count, and
     a ``collective_p2p`` term prices the boundary activation transfers on
-    the innermost tier."""
+    the innermost tier.
+
+    ``staleness``/``backup_workers`` price the bounded-staleness async-PS
+    relaxation (``repro.core.ps.async_step_time``'s terms threaded into
+    the roofline): the grad-sync pull amortizes over ``s + 1`` steps
+    (traffic factor ``(1 + 1/(s+1))/2``), a ``straggler_wait`` term is
+    added (order statistics at ``mean_delay``), and the ``total`` divides
+    by :func:`ps.staleness_efficiency` so stale progress pays its
+    statistical price.  The synchronous defaults leave every term exactly
+    as before."""
     pipe = max(int(pipe), 1)
     m = max(int(n_microbatch) or pipe, pipe)
     dp_data = max(mesh.dp // pipe, 1)
@@ -269,6 +288,12 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
     tiers = _dp_tiers(mesh)
     grad_bytes = 4 * n / mesh.tp / pipe
     t_grad, _ = grad_sync_time(grad_bytes, tiers)
+    # bounded-staleness relaxation: push every step, pull every s+1 steps
+    t_wait = 0.0
+    if staleness > 0 or backup_workers > 0:
+        t_grad *= (1.0 + 1.0 / (staleness + 1)) / 2.0
+        t_wait = ps.straggler_wait(dp_data, backup_workers, mean_delay)
+    stat_eff = ps.staleness_efficiency(staleness)
     tp_wire = (4 * cfg.num_layers * shape.global_batch * shape.seq_len
                * cfg.d_model * 2 / mesh.chips)
     t_tp = tp_wire / cluster.tiers[0].bw
@@ -297,7 +322,9 @@ def estimate_step_time(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec,
             "overlap_fraction": overlap_frac,
             "overlap_n_buckets": float(n_buckets),
             "pipeline_bubble": bubble,
-            "total": max(t_compute, t_mem, t_coll_eff)}
+            "straggler_wait": t_wait,
+            "staleness_efficiency": stat_eff,
+            "total": (max(t_compute, t_mem, t_coll_eff) + t_wait) / stat_eff}
 
 
 # ---------------------------------------------------------------------------
@@ -309,7 +336,9 @@ def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
                        fsdp: bool, opt_kind: str,
                        sync_overlap: bool = False, bucket_mb: float = 0.0,
                        overlap_efficiency: float = 1.0,
-                       pipe: Optional[int] = None, n_microbatch: int = 0
+                       pipe: Optional[int] = None, n_microbatch: int = 0,
+                       staleness: Union[int, Tuple[int, ...], None] = None,
+                       backup_workers: int = 0, mean_delay: float = 0.0
                        ) -> Tuple[List[Dim],
                                   Callable[[Dict], Tuple[float, float, bool]],
                                   Callable[[Dict], float]]:
@@ -332,7 +361,15 @@ def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
     the best unassigned remat, times the 1F1B stretch once a cut is fixed.
 
     Pass ``pipe``/``n_microbatch`` to clamp the grid to a user-forced
-    pipeline shape (``launch/train.py --pipe/--microbatch``)."""
+    pipeline shape (``launch/train.py --pipe/--microbatch``).
+
+    ``staleness`` adds the bounded-staleness async-PS dimension: ``None``
+    keeps the synchronous single candidate ``(0,)`` (legacy plans and
+    goldens are byte-stable), an int clamps it, and a tuple lets the B&B
+    trade pull amortization + straggler savings against the
+    :func:`ps.staleness_efficiency` discount.  ``backup_workers`` /
+    ``mean_delay`` price the slowest-k drop at every staleness
+    candidate."""
     overlap_kw = dict(sync_overlap=sync_overlap, bucket_mb=bucket_mb,
                       overlap_efficiency=overlap_efficiency)
     hbm = mesh.chip.hbm_bytes
@@ -356,10 +393,20 @@ def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
             f"n_microbatch={n_microbatch} on dp={mesh.dp} "
             f"({cycles} layer cycles)")
 
+    if staleness is None:
+        stale_cands: Tuple[int, ...] = (0,)
+    elif isinstance(staleness, int):
+        stale_cands = (int(staleness),)
+    else:
+        stale_cands = tuple(sorted(set(int(s) for s in staleness)))
+    if any(s < 0 for s in stale_cands):
+        raise ValueError(f"staleness candidates must be >= 0: {stale_cands}")
+
     dims = [Dim("pipe_m", tuple(pipe_m)),
             Dim("microbatch", (1, 2, 4, 8, 16, 32)),
             Dim("attn_impl", ("dense", "chunked")),
-            Dim("remat", ("block", "none"))]
+            Dim("remat", ("block", "none")),
+            Dim("staleness", stale_cands)]
 
     def stage_rows(p: int, m: int) -> int:
         return max(shape.global_batch // (mesh.dp // p) // m, 1)
@@ -368,6 +415,9 @@ def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
         p, m = config["pipe_m"]
         mb, attn_impl, remat = (config["microbatch"], config["attn_impl"],
                                 config["remat"])
+        s = config["staleness"]
+        if s and p > 1:  # async PS assumes one flat data axis (no pipe)
+            return float("inf"), float("inf"), False
         if p == 1:
             if mb > b_rep or b_rep % mb:
                 return float("inf"), float("inf"), False
@@ -386,7 +436,9 @@ def train_search_space(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec, *,
                 seq_parallel=True, opt_kind=opt_kind,
                 pipe=p, n_microbatch=m)
         t = estimate_step_time(cfg, shape, mesh, remat, rows,
-                               pipe=p, n_microbatch=m, **overlap_kw)["total"]
+                               pipe=p, n_microbatch=m, staleness=s,
+                               backup_workers=backup_workers,
+                               mean_delay=mean_delay, **overlap_kw)["total"]
         # dense attention has no flash overhead; tiny bonus at short S
         if attn_impl == "dense" and shape.seq_len <= 4096:
             t *= 0.98
@@ -411,9 +463,13 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
                mesh: MeshSpec = SINGLE_POD, *,
                sync_overlap: bool = False, bucket_mb: float = 0.0,
                overlap_efficiency: float = 1.0,
-               pipe: Optional[int] = None, n_microbatch: int = 0) -> Plan:
+               pipe: Optional[int] = None, n_microbatch: int = 0,
+               staleness: Union[int, Tuple[int, ...], None] = None,
+               backup_workers: int = 0, mean_delay: float = 0.0) -> Plan:
     overlap_kw = dict(sync_overlap=sync_overlap, bucket_mb=bucket_mb,
                       overlap_efficiency=overlap_efficiency)
+    async_kw = dict(staleness=staleness, backup_workers=backup_workers,
+                    mean_delay=mean_delay)
     notes: List[str] = []
     if mesh.chip.calibrated:
         notes.append(f"priced on measured constants ({mesh.chip.name}: "
@@ -437,9 +493,10 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
     # attention x remat, priced by the roofline under the HBM bound
     dims, evaluate, lb = train_search_space(
         cfg, shape, mesh, fsdp=fsdp, opt_kind=opt_kind,
-        pipe=pipe, n_microbatch=n_microbatch, **overlap_kw)
+        pipe=pipe, n_microbatch=n_microbatch, **overlap_kw, **async_kw)
     found = search_bnb(dims, evaluate, lower_bound=lb)
     p, n_micro = found.config["pipe_m"]
+    stale = int(found.config["staleness"])
     attn_impl, remat = found.config["attn_impl"], found.config["remat"]
     dp_data = mesh.dp // p
     mb = (found.config["microbatch"] if p == 1
@@ -473,8 +530,16 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
     # Lemma 3.1: overhead ratio from the non-compute roofline terms — with
     # overlap on, only the *exposed* collective share counts as overhead
     terms = estimate_step_time(cfg, shape, mesh, remat, mb,
-                               pipe=p, n_microbatch=n_micro, **overlap_kw)
+                               pipe=p, n_microbatch=n_micro, staleness=stale,
+                               backup_workers=backup_workers,
+                               mean_delay=mean_delay, **overlap_kw)
     r_o = r_o_from_terms(terms)
+    if stale > 0 or backup_workers > 0:
+        notes.append(
+            f"async PS: staleness={stale} (pull amortized "
+            f"1/{stale + 1}), backup_workers={backup_workers}, straggler "
+            f"wait {terms['straggler_wait']:.3g}s, statistical efficiency "
+            f"{terms['staleness_efficiency']:.2f}")
     eff = amdahl.efficiency(mesh.chips, r_o / mesh.chips)  # R_O already aggregate
     if sync_overlap:
         exposed = terms["collective_grad_exposed"]
@@ -497,7 +562,8 @@ def plan_train(cfg: ModelConfig, shape: ShapeConfig,
         calibrated=mesh.chip.calibrated,
         sync_overlap=sync_overlap, bucket_mb=bucket_mb,
         pipe=p, n_microbatch=n_micro,
-        stage_cut=list(cut) if cut else None, notes=notes,
+        stage_cut=list(cut) if cut else None,
+        staleness=stale, backup_workers=backup_workers, notes=notes,
     )
 
 
@@ -530,10 +596,15 @@ def plan_decode(cfg: ModelConfig, shape: ShapeConfig,
 def plan(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshSpec = SINGLE_POD, *,
          sync_overlap: bool = False, bucket_mb: float = 0.0,
          overlap_efficiency: float = 1.0,
-         pipe: Optional[int] = None, n_microbatch: int = 0) -> Plan:
+         pipe: Optional[int] = None, n_microbatch: int = 0,
+         staleness: Union[int, Tuple[int, ...], None] = None,
+         backup_workers: int = 0, mean_delay: float = 0.0) -> Plan:
     if shape.kind == "train" or shape.kind == "prefill":
         return plan_train(cfg, shape, mesh, sync_overlap=sync_overlap,
                           bucket_mb=bucket_mb,
                           overlap_efficiency=overlap_efficiency,
-                          pipe=pipe, n_microbatch=n_microbatch)
+                          pipe=pipe, n_microbatch=n_microbatch,
+                          staleness=staleness,
+                          backup_workers=backup_workers,
+                          mean_delay=mean_delay)
     return plan_decode(cfg, shape, mesh)  # decode has no gradient sync

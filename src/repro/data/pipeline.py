@@ -65,12 +65,13 @@ class PrefetchLoader:
 
     def __init__(self, cfg: ModelConfig, batch: int, seq: int, *,
                  corpus: Optional[SyntheticCorpus] = None, depth: int = 2,
-                 sharding=None, seed: int = 0):
+                 sharding=None, seed: int = 0, skip_batches: int = 0):
         self.cfg = cfg
         self.batch = batch
         self.seq = seq
         self.corpus = corpus or SyntheticCorpus(cfg.vocab_size, seed=seed)
         self.sharding = sharding
+        self.skip_batches = int(skip_batches)
         self.q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._producer, daemon=True)
@@ -88,10 +89,19 @@ class PrefetchLoader:
         return out
 
     def _producer(self):
+        k = self.cfg.num_codebooks or 0
+        need = self.batch * (self.seq + 1) * max(k, 1)
+        # elastic resume: the token stream is a pure function of (seed,
+        # consumption order), so skipping N batches through the SAME _fill
+        # path leaves _buf/_shard_idx exactly as N real batches would —
+        # batch N+1 onward (and its shard-seeded image_embeds rng) is
+        # bit-identical to an uninterrupted run
+        for _ in range(self.skip_batches):
+            if self._stop.is_set():
+                return
+            self._fill(need)
         while not self._stop.is_set():
             t0 = monotonic()
-            k = self.cfg.num_codebooks or 0
-            need = self.batch * (self.seq + 1) * max(k, 1)
             raw = self._fill(need)
             t_load = monotonic() - t0
 

@@ -19,6 +19,12 @@ the mesh data axis and measures what the lemma only predicts:
   bit-identical to ``DataParallelTrainer`` on the same token stream, with
   a measured-vs-``(p-1)/(m+p-1)`` bubble reconciliation in
   :class:`PipelineReport`.
+- :mod:`repro.distributed.async_ps` — ``AsyncPSTrainer``: bounded-staleness
+  parameter-server sync (workers at most ``s`` steps stale, ``s=0``
+  bit-identical to the synchronous ``parameter_server`` strategy) with
+  backup-worker straggler mitigation (drop the slowest ``k`` of ``dp``
+  gradients), reconciled against ``repro.core.ps.async_step_time`` in an
+  :class:`AsyncPSReport`.
 - :mod:`repro.distributed.overlap` — bucketed comm/compute overlap:
   :class:`BucketPlan` partitions the gradient pytree into size-targeted,
   grad-availability-ordered sync buckets; ``DataParallelTrainer(
@@ -29,6 +35,9 @@ the mesh data axis and measures what the lemma only predicts:
 Run anything here under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
 so the data axis is real (8 simulated devices) rather than napkin math.
 """
+from repro.distributed.async_ps import (  # noqa: F401
+    AsyncPSReport, AsyncPSTrainer,
+)
 from repro.distributed.collectives import (  # noqa: F401
     STRATEGIES, SyncStrategy, get_strategy, flatten_tree, unflatten_tree,
 )

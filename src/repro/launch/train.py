@@ -38,9 +38,10 @@ def build_spec(args) -> JobSpec:
         n_microbatch=args.microbatch, sync=args.sync,
         compress=args.compress, topology=args.topology,
         sync_overlap=args.overlap, bucket_mb=args.bucket_mb,
+        staleness=args.staleness, backup_workers=args.backup_workers,
         tune=args.autotune, tune_cache=args.tune_cache,
         ckpt_dir=args.ckpt_dir,
-        ckpt_every=50 if args.ckpt_dir else 0,
+        ckpt_every=args.ckpt_every or (50 if args.ckpt_dir else 0),
         trace_dir=getattr(args, "trace_dir", ""))
 
 
@@ -59,7 +60,19 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--plan", action="store_true",
                     help="consult the paper-planner for runtime knobs")
-    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="elastic checkpoint directory: async atomic saves "
+                         "every --ckpt-every steps, auto-resume from the "
+                         "latest complete step on restart")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint period in steps (0 = 50 when "
+                         "--ckpt-dir is set)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="bounded-staleness async PS: max worker params age "
+                         "in steps (0 = synchronous; needs --dp)")
+    ap.add_argument("--backup-workers", type=int, default=0,
+                    help="drop the slowest k of dp gradients per step "
+                         "(0 = wait for every worker; needs --dp)")
     ap.add_argument("--dp", type=int, default=0,
                     help="run the explicit data-parallel trainer on this many "
                          "devices (0 = single-process GSPMD loop)")
@@ -134,6 +147,16 @@ def main():
                   f"{s['overlap_fraction']:.0%} of sync "
                   f"(exposed {s['exposed_comm_time']*1e3:.1f}ms of "
                   f"{s['measured_comm_s']*1e3:.1f}ms serial)")
+    if "async_ps" in rep.measured:
+        a = rep.measured["async_ps"]
+        print(f"async PS: staleness={a['staleness']} "
+              f"(age mean {a['mean_age']:.2f} / max {a['max_age']}), "
+              f"backup_workers={a['backup_workers']} "
+              f"({a['drops']} grads dropped), "
+              f"pull amortized 1/{a['staleness'] + 1}; model wall step "
+              f"{a['t_step_model']['wall_step']*1e3:.3g}ms at "
+              f"{a['t_step_model']['efficiency']:.0%} statistical "
+              f"efficiency")
     if "pipeline" in rep.measured:
         pr = rep.measured["pipeline"]
         print(f"pipeline: {pr['pipe']} stages x {pr['n_microbatch']} "
@@ -168,6 +191,10 @@ def main():
     }
     if "sync" in m and m["sync"].get("sync_overlap"):
         summary["overlap_fraction"] = m["sync"]["overlap_fraction"]
+    if "async_ps" in m:
+        summary["staleness"] = m["async_ps"]["staleness"]
+        summary["backup_workers"] = m["async_ps"]["backup_workers"]
+        summary["mean_age"] = m["async_ps"]["mean_age"]
     print(json.dumps(summary))
 
 

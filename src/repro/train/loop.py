@@ -29,7 +29,7 @@ from repro.models.common import materialize
 from repro.obs.trace import Tracer, monotonic
 from repro.optim import adamw as opt_lib
 from repro.launch.steps import build_train_step
-from repro.checkpoint import io as ckpt_io
+from repro.checkpoint import CheckpointManager, latest_step as ckpt_latest
 
 
 @dataclass
@@ -37,6 +37,7 @@ class TrainResult:
     losses: List[float]
     step_times: List[StepTimes]
     tokens_per_s: float
+    start_step: int = 0
 
     @property
     def mean_r_o(self) -> float:
@@ -55,6 +56,7 @@ class TrainResult:
         head, tail = self.losses[:5], self.losses[-5:]
         return {
             "steps": len(self.losses),
+            "start_step": int(self.start_step),
             "loss_first": float(np.mean(head)) if head else float("nan"),
             "loss_last": float(np.mean(tail)) if tail else float("nan"),
             "losses": [float(l) for l in self.losses],
@@ -86,7 +88,18 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
 
     The ``step`` span's wall clock IS the StepTimes compute measurement, so
     the loop needs a live clock: a missing/disabled tracer is replaced by a
-    private enabled one (events go nowhere, timing still works)."""
+    private enabled one (events go nowhere, timing still works).
+
+    Checkpointing: when ``ckpt_dir`` is set the loop saves the full
+    training state (``params`` + ``opt_state``, minus any dp-shaped ``ef``
+    error-feedback leaves, which depend on the device grid and are re-
+    initialized on restore) every ``ckpt_every`` steps via an async
+    :class:`CheckpointManager`, and AUTO-RESUMES: if a complete checkpoint
+    already exists in ``ckpt_dir``, training restarts from its step with
+    the loader fast-forwarded, so the resumed loss trajectory matches an
+    uninterrupted run — even onto a different ``(dp, pipe)`` grid, because
+    the checkpoint stores the logical (replicated) tree and restore re-
+    shards onto the live templates."""
     if tracer is None or not tracer.enabled:
         tracer = Tracer(enabled=True)
     key = jax.random.PRNGKey(seed)
@@ -94,10 +107,34 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
         params = materialize(M.model_specs(cfg), key)
     if opt_state is None:
         opt_state = opt_lib.init_state(opt, params)
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start_step = 0
+    if mgr is not None and ckpt_latest(ckpt_dir) is not None:
+        # "ef" has a leading dp axis (one slot per data shard) so it is
+        # grid-dependent: excluded from the checkpoint, kept zero-fresh here
+        ef = opt_state.get("ef") if isinstance(opt_state, dict) else None
+        tmpl_state = {k: v for k, v in opt_state.items() if k != "ef"} \
+            if isinstance(opt_state, dict) else opt_state
+        restored, start_step = mgr.restore(
+            {"params": params, "opt_state": tmpl_state})
+        params = restored["params"]
+        opt_state = restored["opt_state"]
+        if ef is not None:
+            opt_state = dict(opt_state)
+            opt_state["ef"] = ef
+        if start_step >= steps:
+            print(f"  checkpoint at step {start_step} >= steps {steps}; "
+                  f"nothing to do", flush=True)
+        else:
+            print(f"  resuming from checkpoint step {start_step}",
+                  flush=True)
+
     own_loader = loader is None
     if loader is None:
         loader = PrefetchLoader(cfg, batch, seq, seed=seed,
-                                sharding=batch_sharding)
+                                sharding=batch_sharding,
+                                skip_batches=start_step)
 
     if step_fn is None:
         step_fn = jax.jit(build_train_step(cfg, run, opt),
@@ -106,9 +143,8 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
     losses: List[float] = []
     times: List[StepTimes] = []
     t_start = monotonic()
-    pending_ckpt = None
     try:
-        for i in range(steps):
+        for i in range(start_step, steps):
             with tracer.span("data_wait", step=i):
                 dev_batch, bt = next(loader)
             with tracer.span("step", step=i) as sp:
@@ -123,12 +159,12 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
                 data_load=bt.data_load, data_prep=bt.data_prep, h2d=bt.h2d,
                 compute=max(t_comp - t_comm - t_upd, 0.0),
                 param_update=t_upd, dist_update=t_comm))
-            if ckpt_dir and ckpt_every and (i + 1) % ckpt_every == 0:
-                if pending_ckpt is not None:
-                    pending_ckpt.join()
-                host_params = jax.tree_util.tree_map(np.asarray, params)
-                pending_ckpt = ckpt_io.save(host_params, ckpt_dir, i + 1,
-                                            blocking=False)
+            if mgr is not None and ckpt_every and (i + 1) % ckpt_every == 0:
+                payload = {"params": params,
+                           "opt_state": {k: v for k, v in opt_state.items()
+                                         if k != "ef"}
+                           if isinstance(opt_state, dict) else opt_state}
+                mgr.save(i + 1, payload)
             if log_every and (i % log_every == 0 or i == steps - 1):
                 print(f"  step {i:4d} loss {loss:.4f} "
                       f"compute {t_comp*1e3:.0f}ms io "
@@ -137,8 +173,8 @@ def train(cfg: ModelConfig, run: RunConfig, opt: opt_lib.OptConfig, *,
     finally:
         if own_loader:
             loader.close()
-        if pending_ckpt is not None:
-            pending_ckpt.join()
+        if mgr is not None:
+            mgr.close()
     wall = monotonic() - t_start
-    tokens = steps * batch * seq
-    return TrainResult(losses, times, tokens / wall)
+    tokens = (steps - start_step) * batch * seq
+    return TrainResult(losses, times, tokens / max(wall, 1e-9), start_step)

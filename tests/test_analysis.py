@@ -246,6 +246,53 @@ def test_dt103_host_sync_outside_collectives_is_clean():
     assert determinism.analyze_source(DT_GOOD_SYNC, "src/repro/fix.py") == []
 
 
+DT_BAD_WRITE = dedent("""
+    import json
+    import numpy as np
+
+    def save_meta(d, meta):
+        (d / "meta.json").write_text(json.dumps(meta))
+
+    def save_arrays(d, arrays):
+        with open(d / "step.npz", "wb") as f:
+            np.savez(f, **arrays)
+""")
+
+DT_GOOD_WRITE = dedent("""
+    import json
+    import os
+    import numpy as np
+
+    def save_meta(d, meta):
+        tmp = d / "meta.json.tmp"
+        tmp.write_text(json.dumps(meta))
+        os.replace(tmp, d / "meta.json")
+
+    def save_arrays(d, arrays):
+        tmp = d / "step.npz.tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        tmp.replace(d / "step.npz")  # Path.replace = same atomic syscall
+""")
+
+
+def test_dt104_bare_write_in_checkpoint_path():
+    found = determinism.analyze_source(DT_BAD_WRITE,
+                                       "src/repro/checkpoint/fix.py")
+    assert codes(found) == ["DT104"] and len(found) == 2
+
+
+def test_dt104_tmp_plus_replace_is_clean():
+    assert determinism.analyze_source(DT_GOOD_WRITE,
+                                      "src/repro/checkpoint/fix.py") == []
+
+
+def test_dt104_scoped_to_checkpoint_subtree():
+    # the same bare writes elsewhere in the repo are some other rule's
+    # problem — DT104 only guards the checkpoint protocol
+    assert determinism.analyze_source(DT_BAD_WRITE, "src/repro/fix.py") == []
+
+
 # ---------------------------------------------------------------------------
 # Mesh axes (MX1xx)
 # ---------------------------------------------------------------------------

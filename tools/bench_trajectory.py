@@ -138,7 +138,8 @@ def append_record(area: str, report_path: str, *,
         "kind": kind,
         "spec": {k: rep["spec"].get(k) for k in
                  ("arch", "reduced", "steps", "batch", "seq", "dp",
-                  "sync_overlap", "requests", "n_new", "serve_mode")},
+                  "sync_overlap", "staleness", "backup_workers",
+                  "requests", "n_new", "serve_mode")},
         "metrics": metrics,
     }
     if note:

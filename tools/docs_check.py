@@ -29,7 +29,8 @@ _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _FENCE_RE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
 
 SNIPPET_DOCS = ("docs/tuning_guide.md", "docs/observability.md",
-                "docs/serving.md", "docs/static_analysis.md")
+                "docs/serving.md", "docs/static_analysis.md",
+                "docs/checkpointing.md")
 
 
 def iter_doc_files():
